@@ -1,0 +1,39 @@
+"""Paper Fig. 5: impact of label-set size |L| and average degree d on
+ER- and BA-graphs (indexing time / index size / query time)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.index_builder import build_rlc_index
+from repro.core.queries import generate_queries
+from repro.graphgen import barabasi_albert, erdos_renyi
+
+from .common import Report, timeit
+
+
+def run(quick: bool = True, k: int = 2) -> Report:
+    rep = Report("graph_chars.fig5")
+    n = 400 if quick else 2000
+    degrees = (2, 4) if quick else (2, 3, 4, 5)
+    labels = (8, 16) if quick else (8, 12, 16, 20, 24, 28, 32, 36)
+    n_q = 100 if quick else 1000
+    for fam, gen in (("ER", erdos_renyi),
+                     ("BA", lambda v, d, l, seed=0: barabasi_albert(
+                         v, max(1, int(d / 2)), l, seed))):
+        for d in degrees:
+            for nl in labels:
+                g = gen(n, d, nl, seed=7)
+                t0 = time.perf_counter()
+                idx = build_rlc_index(g, k)
+                it = time.perf_counter() - t0
+                qs = generate_queries(g, k, n_true=n_q, n_false=n_q,
+                                      seed=3)
+                tq = timeit(lambda: [idx.query(s, t, L)
+                                     for s, t, L, _ in qs.all()])
+                rep.add(family=fam, V=g.num_vertices, E=g.num_edges,
+                        d=d, L=nl, it_s=round(it, 3),
+                        is_bytes=idx.size_bytes(),
+                        query_ms=round(tq * 1e3, 2),
+                        n_true=len(qs.true_queries),
+                        n_false=len(qs.false_queries))
+    return rep

@@ -1,0 +1,33 @@
+"""Paper Fig. 4 / Fig. 7: impact of recursive k on indexing time, index
+size, and query time (expected: exponential IT/IS growth in k; query time
+grows with index size)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.index_builder import build_rlc_index
+from repro.core.queries import generate_queries
+
+from .common import Report, standin_graph, timeit
+
+
+def run(quick: bool = True) -> Report:
+    rep = Report("k_sweep.fig4")
+    names = ["TW"] if quick else ["TW", "WG"]
+    ks = (2, 3) if quick else (2, 3, 4)
+    n_q = 100 if quick else 1000
+    for name in names:
+        g = standin_graph(name)
+        for k in ks:
+            t0 = time.perf_counter()
+            idx = build_rlc_index(g, k)
+            it = time.perf_counter() - t0
+            qs = generate_queries(g, k, n_true=n_q, n_false=n_q, seed=2)
+            tq = timeit(lambda: [idx.query(s, t, L)
+                                 for s, t, L, _ in qs.all()])
+            rep.add(graph=name, k=k, it_s=round(it, 3),
+                    is_bytes=idx.size_bytes(),
+                    entries=idx.num_entries(),
+                    query_ms=round(tq * 1e3, 2),
+                    n_queries=len(qs.all()))
+    return rep

@@ -1,0 +1,58 @@
+"""Paper Fig. 3: execution time of 1000 true- and 1000 false-queries:
+RLC index (host merge join, device batched join, Pallas join) vs online
+BFS / BiBFS traversals vs ETC lookups.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.baselines import ETC, bfs_rlc, bibfs_rlc
+from repro.core.device_index import DeviceIndex
+from repro.core.index_builder import build_rlc_index
+from repro.core.queries import generate_queries
+
+from .common import Report, standin_graph, timeit
+
+
+def run(quick: bool = True, k: int = 2) -> Report:
+    rep = Report("query.fig3")
+    names = ["AD", "EP"] if quick else ["AD", "EP", "TW", "WN", "WG"]
+    n_q = 200 if quick else 1000
+    for name in names:
+        g = standin_graph(name)
+        qs = generate_queries(g, k, n_true=n_q, n_false=n_q, seed=1)
+        idx = build_rlc_index(g, k)
+        dev = DeviceIndex.from_index(idx, g.num_labels)
+        etc = ETC(g, k)
+        for label, queries in (("true", qs.true_queries),
+                               ("false", qs.false_queries)):
+            if not queries:
+                continue
+            t_idx = timeit(lambda: [idx.query(s, t, L)
+                                    for s, t, L in queries])
+            t_bfs = timeit(lambda: [bfs_rlc(g, s, t, L)
+                                    for s, t, L in queries])
+            t_bi = timeit(lambda: [bibfs_rlc(g, s, t, L)
+                                   for s, t, L in queries])
+            t_etc = timeit(lambda: [etc.query(s, t, L)
+                                    for s, t, L in queries])
+            sa = np.array([s for s, _, _ in queries], np.int32)
+            ta = np.array([t for _, t, _ in queries], np.int32)
+            ma = np.array([dev.mr_ids[L] for _, _, L in queries], np.int32)
+            dev.query_batch(sa, ta, ma)  # warm/compile
+            t_dev = timeit(lambda: dev.query_batch(sa, ta, ma))
+            # correctness cross-check while we are here
+            got = dev.query_batch(sa, ta, ma)
+            want = label == "true"
+            assert all(bool(x) == want for x in got.tolist())
+            rep.add(graph=name, qset=label, n=len(queries),
+                    rlc_ms=round(t_idx * 1e3, 2),
+                    rlc_batch_ms=round(t_dev * 1e3, 2),
+                    bfs_ms=round(t_bfs * 1e3, 2),
+                    bibfs_ms=round(t_bi * 1e3, 2),
+                    etc_ms=round(t_etc * 1e3, 2),
+                    speedup_vs_bfs=round(t_bfs / max(t_idx, 1e-9), 1),
+                    speedup_vs_bibfs=round(t_bi / max(t_idx, 1e-9), 1))
+    return rep

@@ -1,0 +1,35 @@
+"""Paper Fig. 6: scalability in |V| at d=5, |L|=16 on ER and BA graphs."""
+from __future__ import annotations
+
+import time
+
+from repro.core.index_builder import build_rlc_index
+from repro.core.queries import generate_queries
+from repro.graphgen import barabasi_albert, erdos_renyi
+
+from .common import Report, timeit
+
+
+def run(quick: bool = True, k: int = 2) -> Report:
+    rep = Report("scalability.fig6")
+    sizes = (125, 250, 500) if quick else (125, 250, 500, 1000, 2000)
+    n_q = 100 if quick else 1000
+    for fam, gen in (("ER", lambda v: erdos_renyi(v, 5, 16, seed=11)),
+                     ("BA", lambda v: barabasi_albert(v, 2, 16, seed=11))):
+        for v in sizes:
+            g = gen(v)
+            t0 = time.perf_counter()
+            idx = build_rlc_index(g, k)
+            it = time.perf_counter() - t0
+            qs = generate_queries(g, k, n_true=n_q, n_false=n_q, seed=5)
+            t_true = timeit(lambda: [idx.query(s, t, L)
+                                     for s, t, L in qs.true_queries]) \
+                if qs.true_queries else 0.0
+            t_false = timeit(lambda: [idx.query(s, t, L)
+                                      for s, t, L in qs.false_queries]) \
+                if qs.false_queries else 0.0
+            rep.add(family=fam, V=v, E=g.num_edges, it_s=round(it, 3),
+                    is_bytes=idx.size_bytes(),
+                    true_ms=round(t_true * 1e3, 2),
+                    false_ms=round(t_false * 1e3, 2))
+    return rep

@@ -1,0 +1,77 @@
+"""Paper Table V (proxy): speed-ups (SU) and workload-size break-even
+points (BEP) of the RLC index over an online graph engine, for
+  Q1 = a+          Q2 = (a.b)+          Q3 = (a.b.c)+
+  Q4 = a+ . b+     (extended query: index + online traversal)
+
+Offline stand-in for the engines: the NFA-guided BFS evaluator (the same
+evaluation strategy Sys1/Sys2/Virtuoso fall back to for RLC queries).
+One index with k=3 serves all four queries (paper §VI-C methodology).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.baselines import NFA, bfs_nfa, rlc_index_plus_traversal
+from repro.core.index_builder import build_rlc_index
+from repro.core.queries import generate_queries
+
+from .common import Report, standin_graph, timeit
+
+
+def run(quick: bool = True) -> Report:
+    rep = Report("systems.tableV")
+    g = standin_graph("WN")          # paper's representative graph
+    k = 3
+    t0 = time.perf_counter()
+    idx = build_rlc_index(g, k)
+    build_s = time.perf_counter() - t0
+    rep.add(graph="WN-standin", V=g.num_vertices, E=g.num_edges,
+            index_build_s=round(build_s, 3),
+            index_bytes=idx.size_bytes())
+
+    labels = np.unique(g.edges[:, 1])[:3].tolist()
+    a, b, c = (labels + [0, 0])[:3]
+    n_pairs = 50 if quick else 200
+    rng = np.random.default_rng(4)
+    pairs = [(int(rng.integers(g.num_vertices)),
+              int(rng.integers(g.num_vertices))) for _ in range(n_pairs)]
+
+    queries = {
+        "Q1": ((a,), [(a,)]),
+        "Q2": ((a, b), [(a, b)]),
+        "Q3": ((a, b, c), [(a, b, c)]),
+    }
+    for qname, (L, blocks) in queries.items():
+        nfa = NFA.from_plus_blocks(blocks)
+        t_engine = timeit(lambda: [bfs_nfa(g, s, t, nfa)
+                                   for s, t in pairs])
+        t_idx = timeit(lambda: [idx.query(s, t, L) for s, t in pairs])
+        # answers must agree
+        for s, t in pairs:
+            assert idx.query(s, t, L) == bfs_nfa(g, s, t, nfa), (qname, s, t)
+        su = t_engine / max(t_idx, 1e-9)
+        per_q_gain = (t_engine - t_idx) / n_pairs
+        bep = int(np.ceil(build_s / per_q_gain)) if per_q_gain > 0 else -1
+        rep.add(query=qname, n=n_pairs,
+                engine_ms=round(t_engine * 1e3, 2),
+                rlc_ms=round(t_idx * 1e3, 2),
+                speedup=round(su, 1), bep=bep)
+
+    # Q4 extended: a+ ∘ b+ via index + online traversal (paper §VI-C)
+    nfa4 = NFA.from_plus_blocks([(a,), (b,)])
+    t_engine = timeit(lambda: [bfs_nfa(g, s, t, nfa4) for s, t in pairs])
+    t_q4 = timeit(lambda: [rlc_index_plus_traversal(idx, g, s, t,
+                                                    [(a,), (b,)])
+                           for s, t in pairs])
+    for s, t in pairs:
+        assert rlc_index_plus_traversal(idx, g, s, t, [(a,), (b,)]) == \
+            bfs_nfa(g, s, t, nfa4), (s, t)
+    per_q_gain = (t_engine - t_q4) / n_pairs
+    rep.add(query="Q4", n=n_pairs, engine_ms=round(t_engine * 1e3, 2),
+            rlc_ms=round(t_q4 * 1e3, 2),
+            speedup=round(t_engine / max(t_q4, 1e-9), 1),
+            bep=int(np.ceil(build_s / per_q_gain))
+            if per_q_gain > 0 else -1)
+    return rep

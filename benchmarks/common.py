@@ -1,0 +1,77 @@
+"""Shared benchmark helpers: timing, CSV rows, graph stand-ins.
+
+Real SNAP/KONECT datasets are not available offline; each paper graph gets
+a synthetic stand-in with matched |L|, degree profile and cyclicity knobs,
+scaled down so the single-core container finishes the suite (paper scale
+is reproduced by the same code paths; scale factors recorded per row).
+"""
+from __future__ import annotations
+
+import csv
+import io
+import sys
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.graphgen import barabasi_albert, erdos_renyi
+
+
+def timeit(fn: Callable, repeats: int = 1) -> float:
+    """Median wall seconds over ``repeats`` calls."""
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+class Report:
+    def __init__(self, name: str):
+        self.name = name
+        self.rows: List[Dict] = []
+
+    def add(self, **kw):
+        self.rows.append(kw)
+        print(f"[{self.name}] " + " ".join(f"{k}={v}" for k, v in kw.items()),
+              flush=True)
+
+    def to_csv(self) -> str:
+        if not self.rows:
+            return ""
+        keys: List[str] = []
+        for r in self.rows:              # union, first-seen order
+            for k in r:
+                if k not in keys:
+                    keys.append(k)
+        buf = io.StringIO()
+        w = csv.DictWriter(buf, fieldnames=keys, restval="")
+        w.writeheader()
+        for r in self.rows:
+            w.writerow(r)
+        return buf.getvalue()
+
+
+# Scaled-down stand-ins for the paper's Table III graphs (quick mode).
+# (name, |V|, avg_degree, |L|, family)
+PAPER_GRAPH_STANDINS = [
+    ("AD", 400, 8.0, 3, "ba"),      # Advogato: dense, few labels, loops
+    ("EP", 600, 6.8, 8, "ba"),      # Soc-Epinions
+    ("TW", 800, 1.8, 8, "er"),      # Twitter-ICWSM: sparse
+    ("WN", 700, 4.3, 8, "er"),      # Web-NotreDame
+    ("WG", 800, 5.7, 8, "ba"),      # Web-Google
+]
+
+
+def standin_graph(name: str, scale: float = 1.0):
+    for nm, v, d, l, fam in PAPER_GRAPH_STANDINS:
+        if nm == name:
+            n = int(v * scale)
+            if fam == "ba":
+                return barabasi_albert(n, max(2, int(d / 2)), l,
+                                       seed=hash(nm) % 2**31)
+            return erdos_renyi(n, d, l, seed=hash(nm) % 2**31)
+    raise KeyError(name)

@@ -1,0 +1,81 @@
+"""Render §Dry-run / §Roofline markdown tables from the dry-run artifacts
+(benchmarks/artifacts/dryrun/*.json)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def load_records(art_dir: str = ART_DIR) -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        r["_file"] = os.path.basename(path)
+        recs.append(r)
+    return recs
+
+
+def _fmt_bytes(b) -> str:
+    if b is None:
+        return "-"
+    return f"{b / 2**30:.2f}"
+
+
+def roofline_table(recs: List[Dict], mesh: str = "pod") -> str:
+    """One row per (arch x shape): the §Roofline table."""
+    rows = [
+        "| arch | shape | status | compute (s) | memory (s) | coll (s) |"
+        " dominant | roofline frac | MODEL/HLO flops | HBM GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if mesh not in r.get("_file", ""):
+            continue
+        if r.get("status") == "skipped" or r.get("skipped"):
+            rows.append(f"| {r['arch']} | {r['shape']} | SKIP | - | - | - |"
+                        f" - | - | - | - |")
+            continue
+        if r.get("status") == "error":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | - | - |"
+                        f" - | - | - | - | - |")
+            continue
+        t = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok "
+            f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+            f"| {t['collective_s']:.4f} | {t['dominant'].replace('_s','')} "
+            f"| {t['roofline_fraction']:.3f} "
+            f"| {r.get('useful_flops_ratio', 0):.2f} "
+            f"| {_fmt_bytes(r['memory']['peak_bytes_per_dev'])} |")
+    return "\n".join(rows)
+
+
+def dryrun_summary(recs: List[Dict]) -> str:
+    ok = sum(1 for r in recs if r.get("status") == "ok")
+    skip = sum(1 for r in recs if r.get("status") == "skipped")
+    err = sum(1 for r in recs if r.get("status") == "error")
+    lines = [f"cells: {len(recs)}  ok: {ok}  skipped: {skip}  "
+             f"errors: {err}"]
+    for r in recs:
+        if r.get("status") == "error":
+            lines.append(f"  ERROR {r['_file']}: {r.get('error','')[:160]}")
+    return "\n".join(lines)
+
+
+def main():
+    recs = load_records()
+    print(dryrun_summary(recs))
+    for mesh in ("pod", "multipod"):
+        sub = [r for r in recs if f"__{mesh}" in r.get("_file", "")]
+        if sub:
+            print(f"\n## Roofline — {mesh} mesh\n")
+            print(roofline_table(recs, mesh=f"__{mesh}"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Default is quick mode (scaled-down graphs, single-core container);
+``--full`` runs paper-scale sweeps. CSVs land in benchmarks/artifacts/.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", type=str, default=None)
+    args = ap.parse_args(argv)
+    quick = not args.full
+    os.makedirs(ART, exist_ok=True)
+
+    from . import (bench_device, bench_graph_chars, bench_indexing,
+                   bench_k, bench_query, bench_scalability, bench_systems)
+
+    suites = {
+        "indexing": lambda: bench_indexing.run(quick),
+        "pruning": lambda: bench_indexing.run_pruning_ablation(),
+        "query": lambda: bench_query.run(quick),
+        "k": lambda: bench_k.run(quick),
+        "graph_chars": lambda: bench_graph_chars.run(quick),
+        "scalability": lambda: bench_scalability.run(quick),
+        "systems": lambda: bench_systems.run(quick),
+        "device": lambda: bench_device.run(quick),
+    }
+    failures = []
+    for name, fn in suites.items():
+        if args.only and args.only != name:
+            continue
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        try:
+            rep = fn()
+            csv = rep.to_csv()
+            with open(os.path.join(ART, f"{rep.name}.csv"), "w") as f:
+                f.write(csv)
+            print(f"===== {name} done in {time.time()-t0:.1f}s "
+                  f"({len(rep.rows)} rows) =====", flush=True)
+        except Exception as e:  # pragma: no cover
+            import traceback
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+    if failures:
+        print("\nFAILED suites:", failures)
+        sys.exit(1)
+    print("\nAll benchmark suites completed.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with
+checkpoint/restart and straggler monitoring (deliverable b).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+Uses a 100M-param qwen3-family config (12L, d=768) on synthetic data;
+prints the loss curve and survives an injected mid-run failure.
+"""
+import argparse
+import os
+import tempfile
+
+import jax
+
+from repro.configs.base import ArchConfig, dense_pattern, register
+from repro.launch.train import run
+from repro.models import count_params, init_model
+
+CFG_100M = register(ArchConfig(
+    name="examples-lm-100m",
+    family="dense",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=4,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=32000,
+    block_pattern=dense_pattern(12),
+    qk_norm=True,
+    vocab_pad_multiple=128,
+    param_dtype="float32",
+    compute_dtype="float32",
+))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    params, _ = init_model(CFG_100M, abstract=True)
+    print(f"model: {count_params(params)/1e6:.1f}M params")
+
+    ckpt = os.path.join(tempfile.gettempdir(), "repro_train_lm_ckpt")
+    state, history, report = run(
+        "examples-lm-100m", steps=args.steps, batch=args.batch,
+        seq=args.seq, ckpt_dir=ckpt, ckpt_every=50, lr=6e-4,
+        log_every=20,
+        fail_at={args.steps // 2: RuntimeError("injected node failure")})
+    print(f"\nloss: {history[0]:.3f} -> {history[-1]:.3f} "
+          f"({len(history)} effective steps)")
+    print(f"restarts survived: {report.restarts}, "
+          f"stragglers flagged: {len(report.straggler_steps)}")
+    assert history[-1] < history[0]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Sharded, async, restart-safe checkpointing (no external deps).
+
+Layout: ``<dir>/step_<N>/`` holding one ``.npy`` per pytree leaf (keyed by
+its flattened path, one file per process shard in multi-host mode) plus a
+``manifest.json`` (tree structure, shapes, dtypes, process count) written
+LAST — a step directory without a manifest is incomplete and ignored, so
+killed writers never corrupt restore (atomicity via rename).
+
+Async: ``CheckpointManager.save_async`` snapshots to host memory
+synchronously (device -> np) and writes on a background thread —
+training resumes immediately (the overlap trick; see ft/ for the
+failure-drill test).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "__"
+
+
+def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_pytree(directory: str, step: int, tree: PyTree,
+                extra: Optional[Dict] = None,
+                process_index: int = 0, num_processes: int = 1) -> str:
+    """Write one checkpoint step (atomic via tmp-dir rename)."""
+    flat = _flatten(tree)
+    final = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(directory, exist_ok=True)
+    tmp = tempfile.mkdtemp(dir=directory, prefix=f".tmp_step{step}_")
+    try:
+        for key, arr in flat.items():
+            np.save(os.path.join(tmp, f"{key}.p{process_index}.npy"), arr)
+        manifest = {
+            "step": step,
+            "keys": sorted(flat.keys()),
+            "shapes": {k: list(v.shape) for k, v in flat.items()},
+            "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+            "num_processes": num_processes,
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and os.path.exists(
+                os.path.join(directory, name, "manifest.json")):
+            steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_pytree(directory: str, step: int, template: PyTree,
+                   process_index: int = 0) -> Tuple[PyTree, Dict]:
+    """Restore into the structure of ``template`` (values ignored)."""
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.load(os.path.join(d, f"{key}.p{process_index}.npy"))
+        leaves.append(arr.astype(manifest["dtypes"][key]))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["extra"]
+
+
+class CheckpointManager:
+    """Keeps the last ``keep`` steps; async background writes."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save_async(self, step: int, tree: PyTree,
+                   extra: Optional[Dict] = None):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def work():
+            try:
+                save_pytree(self.directory, step, host_tree, extra)
+                self._gc()
+            except BaseException as e:   # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def save(self, step: int, tree: PyTree, extra: Optional[Dict] = None):
+        self.wait()
+        save_pytree(self.directory, step, tree, extra)
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.directory)
+            if n.startswith("step_") and os.path.exists(
+                os.path.join(self.directory, n, "manifest.json")))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, template: PyTree
+                       ) -> Optional[Tuple[int, PyTree, Dict]]:
+        self.wait()
+        step = latest_step(self.directory)
+        if step is None:
+            return None
+        tree, extra = restore_pytree(self.directory, step, template)
+        return step, tree, extra

@@ -1,0 +1,161 @@
+"""Batched RLC query evaluation on device (serving path).
+
+The frozen index is laid out as padded per-vertex rows sorted by
+``(aid(hub), mr_id)`` — Algorithm 1's merge-join order. A query batch
+``(s, t, mr)`` evaluates Case 2 (direct entry) and Case 1 (hub join) with
+pure vectorized compares; the hot loop optionally dispatches to the Pallas
+merge-join kernel (:mod:`repro.kernels.mergejoin`).
+
+Row padding uses hub id ``-1`` (never matches a real hub / query vertex).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .minimum_repeat import LabelSeq, mr_id_space
+from .rlc_index import FrozenRLCIndex, RLCIndex
+
+PAD = -1
+
+
+@dataclass
+class DeviceIndex:
+    """Padded dense layout: (n, E) hub-id and mr-id arrays per direction.
+
+    Two query formulations (EXPERIMENTS.md §Perf, cell rlc-query-1m):
+      * dense — (E x E) broadcast join per query (VPU-friendly inside the
+        Pallas kernel where the tile stays in VMEM);
+      * sorted — rows re-encoded as ascending ``hub * C + mr`` keys; the
+        join is a vectorized ``searchsorted`` intersection, moving (Q, E)
+        instead of (Q, E, E) through HBM — the XLA-lowered serving path.
+    """
+
+    num_vertices: int
+    k: int
+    row_len: int
+    out_hub: jax.Array  # (n, E) int32, PAD-filled
+    out_mr: jax.Array   # (n, E) int32
+    in_hub: jax.Array
+    in_mr: jax.Array
+    mr_ids: Dict[LabelSeq, int]
+    num_mrs: int = 0
+    out_key: Optional[jax.Array] = None  # (n, E) int32 sorted asc
+    in_key: Optional[jax.Array] = None
+
+    @staticmethod
+    def from_index(idx: RLCIndex, num_labels: int,
+                   row_len: Optional[int] = None,
+                   pad_to_multiple: int = 8) -> "DeviceIndex":
+        ids = mr_id_space(num_labels, idx.k)
+        frozen = idx.freeze(ids)
+        E = row_len or max(1, frozen.max_row)
+        E = ((E + pad_to_multiple - 1) // pad_to_multiple) * pad_to_multiple
+        n = idx.num_vertices
+
+        def pack(indptr, hub, mr):
+            H = np.full((n, E), PAD, np.int32)
+            M = np.full((n, E), PAD, np.int32)
+            for v in range(n):
+                a, b = indptr[v], indptr[v + 1]
+                ln = min(b - a, E)
+                H[v, :ln] = hub[a:a + ln]
+                M[v, :ln] = mr[a:a + ln]
+            return jnp.asarray(H), jnp.asarray(M)
+
+        oh, om = pack(frozen.out_indptr, frozen.out_hub, frozen.out_mr)
+        ih, im = pack(frozen.in_indptr, frozen.in_hub, frozen.in_mr)
+        C = len(ids)
+
+        def keys(hub, mr):
+            h = np.asarray(hub)
+            m = np.asarray(mr)
+            key = np.where(h == PAD, np.iinfo(np.int32).max,
+                           h.astype(np.int64) * C + m).astype(np.int32)
+            return jnp.asarray(np.sort(key, axis=1))
+
+        return DeviceIndex(n, idx.k, E, oh, om, ih, im, ids, C,
+                           keys(oh, om), keys(ih, im))
+
+    # ---------------------------------------------------------------- #
+    def query_batch(self, s: np.ndarray, t: np.ndarray, mr: np.ndarray,
+                    use_pallas: bool = False,
+                    method: str = "dense") -> np.ndarray:
+        s = jnp.asarray(s, jnp.int32)
+        t = jnp.asarray(t, jnp.int32)
+        mr = jnp.asarray(mr, jnp.int32)
+        if use_pallas:
+            from repro.kernels import ops
+            out = ops.mergejoin_query(
+                self.out_hub, self.out_mr, self.in_hub, self.in_mr,
+                s, t, mr)
+        elif method == "sorted":
+            out = _query_batch_sorted(self.out_key, self.in_key, s, t, mr,
+                                      self.num_mrs)
+        else:
+            out = _query_batch_ref(self.out_hub, self.out_mr, self.in_hub,
+                                   self.in_mr, s, t, mr)
+        return np.asarray(out)
+
+    def query(self, s: int, t: int, L: Sequence[int]) -> bool:
+        c = self.mr_ids.get(tuple(L))
+        if c is None:
+            return False
+        return bool(self.query_batch(np.array([s]), np.array([t]),
+                                     np.array([c]))[0])
+
+
+@jax.jit
+def _query_batch_ref(out_hub, out_mr, in_hub, in_mr, s, t, mr):
+    """Reference batched Algorithm 1 (also the Pallas kernel oracle).
+
+    For each query q: gather rows out[s_q], in[t_q]; Case 2 via direct
+    compares, Case 1 via an (E x E) broadcast join (rows are aid-sorted;
+    the O(E^2) compare is the dense analog of the merge join and is
+    MXU/VPU-friendly at serving batch sizes).
+    """
+    oh = out_hub[s]          # (Q, E)
+    om = out_mr[s]
+    ih = in_hub[t]
+    im = in_mr[t]
+    q_mr = mr[:, None]
+    case2 = jnp.any((oh == t[:, None]) & (om == q_mr), axis=1) | \
+        jnp.any((ih == s[:, None]) & (im == q_mr), axis=1)
+    o_ok = (om == q_mr) & (oh != PAD)            # (Q, E)
+    i_ok = (im == q_mr) & (ih != PAD)
+    join = (oh[:, :, None] == ih[:, None, :]) & \
+        o_ok[:, :, None] & i_ok[:, None, :]      # (Q, E, E)
+    case1 = jnp.any(join, axis=(1, 2))
+    return case2 | case1
+
+
+@jax.jit
+def _query_batch_sorted(out_key, in_key, s, t, mr, num_mrs):
+    """Sorted-key intersection join: O(E log E) per query, (Q, E) HBM
+    traffic (§Perf iteration 1 on rlc-query-1m). Key = hub * C + mr;
+    PAD rows sort to INT32_MAX and never match."""
+    ok = out_key[s]                       # (Q, E) ascending
+    ik = in_key[t]
+    q_mr = mr[:, None]
+    # Case 1: out keys with the queried mr present in the in row
+    pos = jax.vmap(jnp.searchsorted)(ik, ok)        # (Q, E)
+    pos = jnp.minimum(pos, ik.shape[1] - 1)
+    hit = jnp.take_along_axis(ik, pos, axis=1) == ok
+    mr_match = (ok % num_mrs) == q_mr
+    big = jnp.iinfo(jnp.int32).max
+    case1 = jnp.any(hit & mr_match & (ok != big), axis=1)
+    # Case 2: direct entries (t, mr) in L_out(s) / (s, mr) in L_in(t)
+    kt = (t * num_mrs + mr)[:, None]
+    ks = (s * num_mrs + mr)[:, None]
+    p2 = jax.vmap(jnp.searchsorted)(ok, kt[:, 0][:, None])
+    p2 = jnp.minimum(p2, ok.shape[1] - 1)
+    c2a = jnp.take_along_axis(ok, p2, axis=1) == kt
+    p3 = jax.vmap(jnp.searchsorted)(ik, ks[:, 0][:, None])
+    p3 = jnp.minimum(p3, ik.shape[1] - 1)
+    c2b = jnp.take_along_axis(ik, p3, axis=1) == ks
+    return case1 | jnp.any(c2a, axis=1) | jnp.any(c2b, axis=1)

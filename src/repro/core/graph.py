@@ -1,0 +1,134 @@
+"""Edge-labeled directed graph G = (V, E, L) (paper §III).
+
+Storage: an int32 edge table plus CSR adjacency in both directions, grouped
+so that per-(vertex, label) neighbor slices are O(1) to locate. A dense
+per-label boolean adjacency view is available for the TPU dense-semiring
+engine (``core/dense.py``) on graphs where |V|^2 * |L| is affordable.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class LabeledGraph:
+    num_vertices: int
+    num_labels: int
+    # (m, 3) int32 rows of (src, label, dst), deduplicated.
+    edges: np.ndarray
+
+    # --- derived CSR structures (built lazily) ---
+    _fwd: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = field(
+        default=None, repr=False)
+    _bwd: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = field(
+        default=None, repr=False)
+    _label_adj: Optional[np.ndarray] = field(default=None, repr=False)
+
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def from_edges(num_vertices: int, num_labels: int,
+                   edges: np.ndarray) -> "LabeledGraph":
+        edges = np.asarray(edges, dtype=np.int32).reshape(-1, 3)
+        if edges.size:
+            edges = np.unique(edges, axis=0)
+        return LabeledGraph(num_vertices, num_labels, edges)
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.edges.shape[0])
+
+    # ------------------------------------------------------------------ #
+    def _build_csr(self, key_col: int, val_col: int
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """CSR keyed on ``key_col`` vertex; values are (other_vertex, label)
+        sorted by (key, label) so per-label slices are contiguous."""
+        e = self.edges
+        order = np.lexsort((e[:, val_col], e[:, 1], e[:, key_col]))
+        e = e[order]
+        indptr = np.zeros(self.num_vertices + 1, dtype=np.int64)
+        np.add.at(indptr, e[:, key_col] + 1, 1)
+        np.cumsum(indptr, out=indptr)
+        return indptr, e[:, val_col].copy(), e[:, 1].copy()
+
+    @property
+    def fwd(self):
+        """(indptr, dst, label): out-edges of each vertex, label-sorted."""
+        if self._fwd is None:
+            self._fwd = self._build_csr(key_col=0, val_col=2)
+        return self._fwd
+
+    @property
+    def bwd(self):
+        """(indptr, src, label): in-edges of each vertex, label-sorted."""
+        if self._bwd is None:
+            self._bwd = self._build_csr(key_col=2, val_col=0)
+        return self._bwd
+
+    # -- neighbor iteration -------------------------------------------- #
+    def out_edges(self, v: int) -> Tuple[np.ndarray, np.ndarray]:
+        indptr, other, lab = self.fwd
+        s, t = indptr[v], indptr[v + 1]
+        return other[s:t], lab[s:t]
+
+    def in_edges(self, v: int) -> Tuple[np.ndarray, np.ndarray]:
+        indptr, other, lab = self.bwd
+        s, t = indptr[v], indptr[v + 1]
+        return other[s:t], lab[s:t]
+
+    def out_neighbors_with_label(self, v: int, label: int) -> np.ndarray:
+        other, lab = self.out_edges(v)
+        lo = np.searchsorted(lab, label, side="left")
+        hi = np.searchsorted(lab, label, side="right")
+        return other[lo:hi]
+
+    def in_neighbors_with_label(self, v: int, label: int) -> np.ndarray:
+        other, lab = self.in_edges(v)
+        lo = np.searchsorted(lab, label, side="left")
+        hi = np.searchsorted(lab, label, side="right")
+        return other[lo:hi]
+
+    # -- degrees & the IN-OUT vertex ordering (paper §V-B) -------------- #
+    def out_degree(self) -> np.ndarray:
+        indptr, _, _ = self.fwd
+        return np.diff(indptr)
+
+    def in_degree(self) -> np.ndarray:
+        indptr, _, _ = self.bwd
+        return np.diff(indptr)
+
+    def access_order(self) -> np.ndarray:
+        """Vertices sorted by (|out(v)|+1)*(|in(v)|+1) descending; ties by
+        vertex id for determinism. ``order[aid-1] = vertex``."""
+        score = (self.out_degree() + 1).astype(np.int64) * \
+                (self.in_degree() + 1).astype(np.int64)
+        return np.lexsort((np.arange(self.num_vertices), -score))
+
+    def access_ids(self) -> np.ndarray:
+        """``aid[v]`` = 1-based access id of vertex v."""
+        order = self.access_order()
+        aid = np.empty(self.num_vertices, dtype=np.int64)
+        aid[order] = np.arange(1, self.num_vertices + 1)
+        return aid
+
+    # -- dense per-label adjacency for the semiring engine -------------- #
+    def label_adjacency(self, dtype=np.float32) -> np.ndarray:
+        """Dense (|L|, n, n) boolean-as-``dtype`` adjacency stack.
+        ``A[l, u, v] = 1`` iff edge (u, l, v)."""
+        if self._label_adj is None or self._label_adj.dtype != dtype:
+            n = self.num_vertices
+            A = np.zeros((self.num_labels, n, n), dtype=dtype)
+            e = self.edges
+            A[e[:, 1], e[:, 0], e[:, 2]] = 1
+            self._label_adj = A
+        return self._label_adj
+
+    # -- stats used in benchmarks (paper Table III) ---------------------- #
+    def loop_count(self) -> int:
+        return int(np.sum(self.edges[:, 0] == self.edges[:, 2]))
+
+    def summary(self) -> Dict[str, int]:
+        return dict(V=self.num_vertices, E=self.num_edges,
+                    L=self.num_labels, loops=self.loop_count())

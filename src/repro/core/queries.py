@@ -1,0 +1,73 @@
+"""Query-workload generation (paper §VI-c).
+
+Uniformly sample (s, t, L^+) triples, classify each with a bidirectional
+product-automaton BFS, and collect 1000 true- and 1000 false-queries.
+Constraints L are drawn from the realizable minimum repeats of the graph
+(uniform over MR space, as in the paper), biased to length <= k.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .baselines import bibfs_rlc
+from .graph import LabeledGraph
+from .minimum_repeat import LabelSeq, enumerate_mrs
+
+
+@dataclass
+class QuerySet:
+    true_queries: List[Tuple[int, int, LabelSeq]]
+    false_queries: List[Tuple[int, int, LabelSeq]]
+
+    def all(self) -> List[Tuple[int, int, LabelSeq, bool]]:
+        return ([(s, t, L, True) for s, t, L in self.true_queries]
+                + [(s, t, L, False) for s, t, L in self.false_queries])
+
+
+def generate_queries(g: LabeledGraph, k: int, n_true: int = 1000,
+                     n_false: int = 1000, seed: int = 0,
+                     max_attempts: Optional[int] = None) -> QuerySet:
+    rng = np.random.default_rng(seed)
+    mrs = enumerate_mrs(g.num_labels, k)
+    # restrict to labels that actually occur (otherwise false-queries are
+    # trivially false and true-queries unreachable)
+    present = np.unique(g.edges[:, 1]) if g.num_edges else np.array([0])
+    mrs = [m for m in mrs if all(l in present for l in m)] or list(mrs)
+    tq: List[Tuple[int, int, LabelSeq]] = []
+    fq: List[Tuple[int, int, LabelSeq]] = []
+    attempts = 0
+    cap = max_attempts or (n_true + n_false) * 200
+    while (len(tq) < n_true or len(fq) < n_false) and attempts < cap:
+        attempts += 1
+        s = int(rng.integers(g.num_vertices))
+        t = int(rng.integers(g.num_vertices))
+        L = mrs[int(rng.integers(len(mrs)))]
+        ans = bibfs_rlc(g, s, t, L)
+        if ans and len(tq) < n_true:
+            tq.append((s, t, L))
+        elif not ans and len(fq) < n_false:
+            fq.append((s, t, L))
+    return QuerySet(tq, fq)
+
+
+def biased_true_queries(g: LabeledGraph, k: int, n: int, seed: int = 0
+                        ) -> QuerySet:
+    """Seed sources from actual edges so dense true sets exist even on very
+    sparse graphs (used by benchmarks to hit the n_true quota quickly)."""
+    rng = np.random.default_rng(seed)
+    mrs = enumerate_mrs(g.num_labels, k)
+    tq: List[Tuple[int, int, LabelSeq]] = []
+    fq: List[Tuple[int, int, LabelSeq]] = []
+    m = g.num_edges
+    attempts = 0
+    while len(tq) < n and attempts < n * 100:
+        attempts += 1
+        e = g.edges[int(rng.integers(m))]
+        s, lab, t = int(e[0]), int(e[1]), int(e[2])
+        L = (lab,)
+        if len(L) <= k:
+            tq.append((s, t, L))
+    return QuerySet(tq, fq)

@@ -1,0 +1,215 @@
+"""The RLC index (paper §V, Definition 4) and Algorithm 1 (query).
+
+Index layout
+------------
+For every vertex ``v`` the index holds two entry sets
+
+    L_in(v)  = {(u, mr) : u ~~mr^+~~> v}      (u reaches v, MR recorded)
+    L_out(v) = {(w, mr) : v ~~mr^+~~> w}
+
+Entries are stored per-vertex as ``dict[hub_vertex] -> set[mr tuple]`` for
+O(1) membership, and can be *frozen* into aid-sorted flat numpy arrays (the
+paper's merge-join layout, also consumed by the batched JAX/Pallas query
+engines in :mod:`repro.core.device_index`).
+
+Query semantics (Definition 4 / Theorem 3): ``(s, t, L^+)`` is true iff
+  * Case 2: ``(t, L) in L_out(s)`` or ``(s, L) in L_in(t)``; or
+  * Case 1: ``exists x: (x, L) in L_out(s) and (x, L) in L_in(t)``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .minimum_repeat import LabelSeq
+
+Entry = Tuple[int, LabelSeq]          # (hub vertex id, minimum repeat)
+EntryMap = Dict[int, Set[LabelSeq]]   # hub vertex id -> set of MRs
+
+
+@dataclass
+class RLCIndex:
+    """A (possibly partially built) RLC index for a graph with ``n`` vertices.
+
+    ``aid`` maps vertex -> 1-based access id (IN-OUT order); entries are kept
+    in dictionaries during construction and optionally frozen to flat arrays.
+    """
+
+    num_vertices: int
+    k: int
+    aid: np.ndarray  # (n,) int64, 1-based access ids
+    l_in: List[EntryMap] = field(default_factory=list)
+    l_out: List[EntryMap] = field(default_factory=list)
+
+    def __post_init__(self):
+        if not self.l_in:
+            self.l_in = [dict() for _ in range(self.num_vertices)]
+        if not self.l_out:
+            self.l_out = [dict() for _ in range(self.num_vertices)]
+
+    # -- construction-time mutation ------------------------------------- #
+    def add_out(self, v: int, hub: int, mr: LabelSeq) -> None:
+        """Record ``(hub, mr)`` in ``L_out(v)`` (v ~~mr^+~~> hub)."""
+        self.l_out[v].setdefault(hub, set()).add(mr)
+
+    def add_in(self, v: int, hub: int, mr: LabelSeq) -> None:
+        """Record ``(hub, mr)`` in ``L_in(v)`` (hub ~~mr^+~~> v)."""
+        self.l_in[v].setdefault(hub, set()).add(mr)
+
+    def has_out(self, v: int, hub: int, mr: LabelSeq) -> bool:
+        s = self.l_out[v].get(hub)
+        return s is not None and mr in s
+
+    def has_in(self, v: int, hub: int, mr: LabelSeq) -> bool:
+        s = self.l_in[v].get(hub)
+        return s is not None and mr in s
+
+    # -- Algorithm 1 ------------------------------------------------------ #
+    def query(self, s: int, t: int, L: Sequence[int]) -> bool:
+        """Algorithm 1. ``L`` must be its own minimum repeat with |L| <= k."""
+        L = tuple(L)
+        # Case 2: direct entries.
+        if self.has_out(s, t, L) or self.has_in(t, s, L):
+            return True
+        # Case 1: merge join over L_out(s) x L_in(t) on the hub vertex.
+        # Dict intersection is semantically identical to the paper's
+        # aid-sorted merge join (the frozen/device path uses the sorted
+        # layout verbatim); iterate the smaller side.
+        out_s, in_t = self.l_out[s], self.l_in[t]
+        if len(out_s) > len(in_t):
+            for hub, mrs in in_t.items():
+                if L in mrs:
+                    o = out_s.get(hub)
+                    if o is not None and L in o:
+                        return True
+        else:
+            for hub, mrs in out_s.items():
+                if L in mrs:
+                    i = in_t.get(hub)
+                    if i is not None and L in i:
+                        return True
+        return False
+
+    # -- stats & invariants ------------------------------------------------ #
+    def num_entries(self) -> int:
+        return (sum(len(m) for d in self.l_in for m in d.values())
+                + sum(len(m) for d in self.l_out for m in d.values()))
+
+    def size_bytes(self) -> int:
+        """Paper-comparable size: each entry = 4B vid + k bytes of labels."""
+        per_entry = 4 + self.k
+        return self.num_entries() * per_entry
+
+    def is_condensed(self) -> bool:
+        """Definition 5: no direct entry is also derivable via a 2-hop pair."""
+        for t in range(self.num_vertices):
+            for s, mrs in self.l_in[t].items():
+                if s == t:
+                    continue
+                for L in mrs:
+                    for hub, o_mrs in self.l_out[s].items():
+                        if hub in (s, t):
+                            continue
+                        if L in o_mrs and L in self.l_in[t].get(hub, ()):
+                            return False
+        for s in range(self.num_vertices):
+            for t, mrs in self.l_out[s].items():
+                if s == t:
+                    continue
+                for L in mrs:
+                    for hub, i_mrs in self.l_in[t].items():
+                        if hub in (s, t):
+                            continue
+                        if L in i_mrs and L in self.l_out[s].get(hub, ()):
+                            return False
+        return True
+
+    # -- frozen merge-join layout ------------------------------------------ #
+    def freeze(self, mr_ids: Dict[LabelSeq, int]) -> "FrozenRLCIndex":
+        return FrozenRLCIndex.from_index(self, mr_ids)
+
+
+@dataclass
+class FrozenRLCIndex:
+    """Aid-sorted flat layout of an :class:`RLCIndex` (paper §V-C query cost).
+
+    Per direction: CSR over vertices; per vertex a run of entries sorted by
+    ``(aid(hub), mr_id)`` — exactly the order Algorithm 1's merge join
+    expects. This layout feeds the batched JAX query engine.
+    """
+
+    num_vertices: int
+    k: int
+    aid: np.ndarray
+    out_indptr: np.ndarray  # (n+1,)
+    out_hub: np.ndarray     # (#out,) hub vertex ids
+    out_mr: np.ndarray      # (#out,) dense MR ids
+    in_indptr: np.ndarray
+    in_hub: np.ndarray
+    in_mr: np.ndarray
+
+    @staticmethod
+    def _flatten(maps: List[EntryMap], aid: np.ndarray,
+                 mr_ids: Dict[LabelSeq, int]):
+        indptr = np.zeros(len(maps) + 1, dtype=np.int64)
+        hubs: List[int] = []
+        mrs: List[int] = []
+        for v, d in enumerate(maps):
+            rows = sorted(
+                ((int(aid[h]), mr_ids[m], h) for h, ms in d.items()
+                 for m in ms))
+            indptr[v + 1] = indptr[v] + len(rows)
+            hubs.extend(r[2] for r in rows)
+            mrs.extend(r[1] for r in rows)
+        return (indptr, np.asarray(hubs, dtype=np.int32),
+                np.asarray(mrs, dtype=np.int32))
+
+    @staticmethod
+    def from_index(idx: RLCIndex, mr_ids: Dict[LabelSeq, int]
+                   ) -> "FrozenRLCIndex":
+        oi, oh, om = FrozenRLCIndex._flatten(idx.l_out, idx.aid, mr_ids)
+        ii, ih, im = FrozenRLCIndex._flatten(idx.l_in, idx.aid, mr_ids)
+        return FrozenRLCIndex(idx.num_vertices, idx.k, idx.aid,
+                              oi, oh, om, ii, ih, im)
+
+    def query(self, s: int, t: int, mr_id: int) -> bool:
+        """Algorithm 1 over the flat layout (true aid-ordered merge join)."""
+        o0, o1 = self.out_indptr[s], self.out_indptr[s + 1]
+        i0, i1 = self.in_indptr[t], self.in_indptr[t + 1]
+        oh, om = self.out_hub[o0:o1], self.out_mr[o0:o1]
+        ih, im = self.in_hub[i0:i1], self.in_mr[i0:i1]
+        # Case 2.
+        if np.any((oh == t) & (om == mr_id)) or np.any((ih == s) & (im == mr_id)):
+            return True
+        # Case 1: merge join on aid(hub).
+        a, b = 0, 0
+        aid = self.aid
+        while a < len(oh) and b < len(ih):
+            ka, kb = aid[oh[a]], aid[ih[b]]
+            if ka < kb:
+                a += 1
+            elif kb < ka:
+                b += 1
+            else:
+                # same hub: scan the equal-aid runs for the queried MR.
+                hub_aid = ka
+                a2 = a
+                found_a = found_b = False
+                while a2 < len(oh) and aid[oh[a2]] == hub_aid:
+                    found_a |= om[a2] == mr_id
+                    a2 += 1
+                b2 = b
+                while b2 < len(ih) and aid[ih[b2]] == hub_aid:
+                    found_b |= im[b2] == mr_id
+                    b2 += 1
+                if found_a and found_b:
+                    return True
+                a, b = a2, b2
+        return False
+
+    @property
+    def max_row(self) -> int:
+        return int(max(np.max(np.diff(self.out_indptr), initial=0),
+                       np.max(np.diff(self.in_indptr), initial=0)))

@@ -1,0 +1,3 @@
+from .elastic import ElasticMeshManager, StragglerMonitor, resilient_loop
+
+__all__ = ["StragglerMonitor", "ElasticMeshManager", "resilient_loop"]

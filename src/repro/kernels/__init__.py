@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the RLC engine's compute hot-spots.
+
+Layout: ``<name>.py`` holds the ``pl.pallas_call`` + BlockSpec kernel,
+``ops.py`` the jit'd padded wrappers, ``ref.py`` the pure-jnp oracles.
+Kernels target TPU (MXU-aligned 128-blocks, VMEM scratch accumulators) and
+are validated on CPU via ``interpret=True``.
+"""
+from . import bitpack, bool_semiring, label_frontier, mergejoin, ops, ref
+
+__all__ = ["bool_semiring", "mergejoin", "bitpack", "label_frontier",
+           "ops", "ref"]

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: label-guided product-automaton frontier step.
+
+One kernel step of the (batched) kernel-BFS: given the frontier matrix
+``F`` (sources x vertices) at automaton position ``p`` and the stacked
+per-label adjacency ``A`` (|L|, V, V), compute ``F @ A[label]`` over the
+OR-AND semiring. The *label* selects the adjacency slice via a
+scalar-prefetch indexed BlockSpec — the whole guided BFS runs without
+materializing the selected slice in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _frontier_kernel(lab_ref, f_ref, a_ref, o_ref, acc_ref, *,
+                     k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(f_ref[...], a_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...] > 0).astype(o_ref.dtype)
+
+
+def frontier_step(frontier: jax.Array, A: jax.Array, label: jax.Array, *,
+                  bb: int = 128, bk: int = 128, bn: int = 128,
+                  interpret: bool = False) -> jax.Array:
+    """next[b, v] = OR_u frontier[b, u] & A[label, u, v].
+
+    frontier: (B, V) f32 0/1;  A: (|L|, V, V) f32;  label: () int32.
+    """
+    B, V = frontier.shape
+    nl, V1, V2 = A.shape
+    assert V == V1 == V2
+    bb, bk, bn = min(bb, B), min(bk, V), min(bn, V)
+    assert B % bb == 0 and V % bk == 0 and V % bn == 0
+    grid = (B // bb, V // bn, V // bk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bk), lambda i, j, kk, lab: (i, kk)),
+            pl.BlockSpec((1, bk, bn), lambda i, j, kk, lab: (lab[0], kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bn), lambda i, j, kk, lab: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bb, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_frontier_kernel, k_steps=grid[2]),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, V), frontier.dtype),
+        interpret=interpret,
+    )(label.reshape(1).astype(jnp.int32), frontier, A)

@@ -1,0 +1,96 @@
+"""Jit'd public wrappers for the Pallas kernels: padding to block multiples,
+interpret-mode dispatch on CPU (the container has no TPU — kernels are
+authored for TPU and validated via the interpreter), and a uniform
+``matmul``-shaped interface the dense engine can plug in.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import bitpack as _bitpack
+from . import bool_semiring as _bs
+from . import label_frontier as _lf
+from . import mergejoin as _mj
+
+_ON_CPU = jax.default_backend() == "cpu"
+
+
+def _pad_to(x: jax.Array, mults):
+    pads = []
+    needs = False
+    for dim, mult in zip(x.shape, mults):
+        target = ((dim + mult - 1) // mult) * mult
+        pads.append((0, target - dim))
+        needs |= target != dim
+    return jnp.pad(x, pads) if needs else x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def bool_matmul(a: jax.Array, b: jax.Array, bm: int = 128, bk: int = 128,
+                bn: int = 128, interpret: Optional[bool] = None
+                ) -> jax.Array:
+    """Padded OR-AND semiring matmul via the Pallas kernel."""
+    interpret = _ON_CPU if interpret is None else interpret
+    m, k = a.shape
+    _, n = b.shape
+    bm_, bk_, bn_ = min(bm, m), min(bk, k), min(bn, n)
+    ap = _pad_to(a, (bm_, bk_))
+    bp = _pad_to(b, (bk_, bn_))
+    out = _bs.bool_matmul(ap, bp, bm=bm_, bk=bk_, bn=bn_,
+                          interpret=interpret)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def closure_step(r: jax.Array, bm: int = 128, bk: int = 128, bn: int = 128,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    interpret = _ON_CPU if interpret is None else interpret
+    n = r.shape[0]
+    b = min(bm, n)
+    rp = _pad_to(r, (b, b))
+    out = _bs.closure_step(rp, bm=min(bm, rp.shape[0]),
+                           bk=min(bk, rp.shape[0]),
+                           bn=min(bn, rp.shape[0]), interpret=interpret)
+    return out[:n, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mergejoin_query(out_hub, out_mr, in_hub, in_mr, s, t, mr,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    interpret = _ON_CPU if interpret is None else interpret
+    return _mj.query_batch(out_hub, out_mr, in_hub, in_mr, s, t, mr,
+                           interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitpack_matmul(a, b_packed, interpret: Optional[bool] = None):
+    interpret = _ON_CPU if interpret is None else interpret
+    m, k = a.shape
+    _, w = b_packed.shape
+    bm, bk, bw = min(128, m), min(128, k), min(128, w)
+    ap = _pad_to(a, (bm, bk))
+    bp = _pad_to(b_packed, (bk, bw))
+    out = _bitpack.bitpack_matmul(ap, bp, bm=bm, bk=bk, bw=bw,
+                                  interpret=interpret)
+    return out[:m, :w]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def frontier_step(frontier, A, label, interpret: Optional[bool] = None):
+    interpret = _ON_CPU if interpret is None else interpret
+    B, V = frontier.shape
+    bb, bk = min(128, B), min(128, V)
+    fp = _pad_to(frontier, (bb, bk))
+    Ap = _pad_to(A, (A.shape[0], bk, bk))
+    out = _lf.frontier_step(fp, Ap, label, bb=min(128, fp.shape[0]),
+                            bk=min(128, Ap.shape[1]),
+                            bn=min(128, Ap.shape[2]), interpret=interpret)
+    return out[:B, :V]
+
+
+pack_bits = _bitpack.pack_bits
+unpack_bits = _bitpack.unpack_bits

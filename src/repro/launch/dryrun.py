@@ -1,0 +1,408 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input shape x mesh) cell with ShapeDtypeStruct inputs —
+no allocation — and record memory/cost/collective analyses for §Roofline.
+
+The two lines above MUST precede any other import (jax locks the device
+count on first init). Run:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+        --shape train_4k --mesh pod            # one cell
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out artifacts/
+
+Cells also cover the paper's own workloads (--arch rlc-build-64k /
+rlc-query-1m): the RLC index build step and the batched query join are
+lowered on the same production meshes.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, cell_supported, get_config
+from repro.configs.rlc_paper import RLC_CELLS
+from repro.launch.mesh import make_production_mesh
+from repro.models import decode_step, init_cache, init_model, prefill
+from repro.models.builder import count_params
+from repro.roofline.analysis import (active_params,
+                                     collective_bytes_from_hlo,
+                                     model_flops, roofline_terms)
+from repro.sharding.partition import (ACT_RULES, PARAM_RULES,
+                                      logical_to_sharding, tree_shardings)
+from repro.train import OptConfig, make_train_step
+from repro.train.train_loop import init_train_state
+
+
+# ------------------------------------------------------------------ #
+# Input specs (ShapeDtypeStruct stand-ins; shardable, no allocation)
+# ------------------------------------------------------------------ #
+def input_specs(cfg, shape, mesh) -> Dict:
+    """Abstract inputs + shardings for one (arch x shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    batch_sharding = logical_to_sharding(
+        (B, S), ("act_batch", None), mesh, ACT_RULES)
+    out = {"kind": shape.kind}
+    if shape.kind == "train":
+        batch = {"tokens": tok, "labels": tok}
+        shards = {"tokens": batch_sharding, "labels": batch_sharding}
+        if cfg.frontend != "none":
+            fe = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_len, cfg.frontend_dim), jnp.float32)
+            batch["frontend"] = fe
+            shards["frontend"] = logical_to_sharding(
+                fe.shape, ("act_batch", None, None), mesh, ACT_RULES)
+        out.update(batch=batch, batch_shardings=shards)
+    elif shape.kind == "prefill":
+        out.update(tokens=tok, tokens_sharding=batch_sharding)
+        if cfg.frontend != "none":
+            fe = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_len, cfg.frontend_dim), jnp.float32)
+            out.update(frontend=fe, frontend_sharding=logical_to_sharding(
+                fe.shape, ("act_batch", None, None), mesh, ACT_RULES))
+    else:  # decode: one new token against a seq_len cache
+        t1 = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        out.update(token=t1, token_sharding=logical_to_sharding(
+            (B, 1), ("act_batch", None), mesh, ACT_RULES))
+    return out
+
+
+def _decode_cache_specs(cfg, shape, mesh):
+    # VLM prefix tokens extend the cached sequence (early fusion)
+    max_len = shape.seq_len + (cfg.frontend_len
+                               if cfg.frontend == "patch_stub" else 0)
+    cache, cache_axes = init_cache(cfg, shape.global_batch, max_len,
+                                   abstract=True)
+    if cfg.encoder_layers:
+        # enc_kv rides in the cache for enc-dec archs
+        from repro.models.lm import _enc_kv_tree  # shapes via abstract eval
+        params, _ = init_model(cfg, abstract=True)
+        enc_out = jax.ShapeDtypeStruct(
+            (shape.global_batch, cfg.frontend_len, cfg.d_model),
+            cfg.dtype("compute"))
+        kv = jax.eval_shape(lambda p, e: _enc_kv_tree(p, cfg, e),
+                            params, enc_out)
+        cache["enc_kv"] = kv
+        K = cfg.num_kv_heads
+        cache_axes["enc_kv"] = jax.tree.map(
+            lambda l: ("layers",) * (l.ndim - 4) +
+            ("act_batch", None, "kv", None), kv,
+            is_leaf=lambda l: hasattr(l, "shape"))
+    shardings = tree_shardings(cache, cache_axes, mesh, ACT_RULES)
+    return cache, shardings
+
+
+# ------------------------------------------------------------------ #
+# Cell lowering
+# ------------------------------------------------------------------ #
+def lower_cell(arch: str, shape_name: str, mesh, microbatches: int = 1,
+               remat: Optional[str] = None, ssm_chunk: int = 0,
+               moe_combine: Optional[str] = None,
+               attn_chunk: int = 0) -> Dict:
+    """Lower + compile one cell; returns the §Roofline record."""
+    if arch.startswith("rlc-"):
+        return lower_rlc_cell(arch, mesh)
+    cfg = get_config(arch)
+    if ssm_chunk:
+        cfg = cfg.replace(ssm_chunk=ssm_chunk)
+    if moe_combine:
+        cfg = cfg.replace(moe_combine=moe_combine)
+    if attn_chunk:
+        cfg = cfg.replace(attn_chunk=attn_chunk)
+    # Layers stay SCANNED (compile cost ~layer-count-independent);
+    # roofline totals come from the scan-aware HLO walk, which multiplies
+    # while-loop bodies by their trip counts (XLA's cost_analysis visits
+    # them once and under-counts by ~num_layers x microbatches).
+    if remat:
+        cfg = cfg.replace(remat=remat)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": reason}
+
+    specs = input_specs(cfg, shape, mesh)
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            oc = OptConfig()
+            state, state_axes = init_train_state(cfg, oc, abstract=True)
+            state_sh = tree_shardings(state, state_axes, mesh, PARAM_RULES)
+            step_fn = make_train_step(cfg, oc, microbatches=microbatches)
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(state_sh, specs["batch_shardings"]),
+                out_shardings=(state_sh, None),
+            ).lower(state, specs["batch"])
+        elif shape.kind == "prefill":
+            params, axes = init_model(cfg, abstract=True)
+            p_sh = tree_shardings(params, axes, mesh, PARAM_RULES)
+            cache, cache_sh = _decode_cache_specs(cfg, shape, mesh)
+            if cfg.encoder_layers:
+                cache.pop("enc_kv", None)
+                cache_sh.pop("enc_kv", None)
+
+            def prefill_fn(p, tokens, cache, frontend=None):
+                return prefill(p, cfg, tokens, cache, frontend)
+
+            args = [params, specs["tokens"], cache]
+            in_sh = [p_sh, specs["tokens_sharding"], cache_sh]
+            if cfg.frontend != "none":
+                args.append(specs["frontend"])
+                in_sh.append(specs["frontend_sharding"])
+            lowered = jax.jit(prefill_fn,
+                              in_shardings=tuple(in_sh)).lower(*args)
+        else:  # decode
+            params, axes = init_model(cfg, abstract=True)
+            p_sh = tree_shardings(params, axes, mesh, PARAM_RULES)
+            cache, cache_sh = _decode_cache_specs(cfg, shape, mesh)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+            def decode_fn(p, cache, token, pos):
+                return decode_step(p, cfg, cache, token, pos)
+
+            lowered = jax.jit(
+                decode_fn,
+                in_shardings=(p_sh, cache_sh, specs["token_sharding"],
+                              None),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(1,),
+            ).lower(params, cache, specs["token"], pos)
+        compiled = lowered.compile()
+    t1 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    from repro.roofline.hlo_tools import scan_aware_totals
+    totals = scan_aware_totals(hlo)
+    coll = {k[5:]: int(v) for k, v in totals.items()
+            if k.startswith("coll_")}
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    flops_dev = float(totals["flops"])
+    bytes_dev = float(totals["hbm_bytes_est"])
+    terms = roofline_terms(flops_dev, bytes_dev, float(coll["total"]))
+
+    params_abs, _ = init_model(cfg, abstract=True)
+    n_params = count_params(params_abs)
+    n_active = active_params(cfg, n_params)
+    embed_params = cfg.padded_vocab * cfg.d_model * (
+        1 if cfg.tie_embeddings else 2)
+    mf = model_flops(cfg, shape.kind, shape.seq_len, shape.global_batch,
+                     n_active, embed_params)
+    if shape.kind == "train":
+        pass  # 6ND already
+    hlo_flops_total = flops_dev * n_chips
+    record = {
+        "arch": arch, "shape": shape_name, "skipped": False,
+        "mesh": dict(mesh.shape), "chips": n_chips,
+        "compile_seconds": round(t1 - t0, 1),
+        "params": n_params, "params_active": n_active,
+        "memory": {
+            "argument_bytes_per_dev": mem.argument_size_in_bytes,
+            "output_bytes_per_dev": mem.output_size_in_bytes,
+            "temp_bytes_per_dev": mem.temp_size_in_bytes,
+            "alias_bytes_per_dev": mem.alias_size_in_bytes,
+            "peak_bytes_per_dev": (mem.argument_size_in_bytes
+                                   + mem.output_size_in_bytes
+                                   + mem.temp_size_in_bytes
+                                   - mem.alias_size_in_bytes),
+        },
+        "cost": {"flops_per_dev": flops_dev,
+                 "bytes_per_dev": bytes_dev,
+                 "hlo_flops_total": hlo_flops_total,
+                 "xla_flops_per_dev": float(cost.get("flops", 0.0)),
+                 "xla_bytes_per_dev": float(cost.get("bytes accessed",
+                                                     0.0))},
+        "collectives": coll,
+        "roofline": terms,
+        "model_flops": mf,
+        "useful_flops_ratio": (mf / hlo_flops_total
+                               if hlo_flops_total else 0.0),
+    }
+    return record
+
+
+# ------------------------------------------------------------------ #
+# The paper's own cells
+# ------------------------------------------------------------------ #
+def lower_rlc_cell(name: str, mesh) -> Dict:
+    """Lower the RLC engine's two hot steps on the production mesh."""
+    from repro.core.dense import bool_matmul
+    cell = RLC_CELLS[name]
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if cell.hub_batch:
+            # one log-doubling closure step over the reachability matrix:
+            # R | R @ R with R (C_mr batch folded into rows) row-sharded
+            n = cell.num_vertices
+            R = jax.ShapeDtypeStruct((n, n), jnp.bfloat16)
+            row_sh = logical_to_sharding(
+                (n, n), ("act_batch", "act_heads"), mesh,
+                {"act_batch": ("pod", "data"), "act_heads": "model"})
+
+            def closure_step(r):
+                rr = (jnp.matmul(r, r, preferred_element_type=jnp.float32)
+                      > 0).astype(r.dtype)
+                return jnp.maximum(r, rr)
+
+            lowered = jax.jit(closure_step, in_shardings=(row_sh,),
+                              out_shardings=row_sh).lower(R)
+        else:
+            # batched query join: Q queries against padded (n, E) rows
+            Q, E = cell.query_batch, cell.row_len
+            n = cell.num_vertices
+            rep = NamedSharding(mesh, P())
+            qsh = logical_to_sharding(
+                (Q,), ("act_batch",), mesh, ACT_RULES)
+            rows = jax.ShapeDtypeStruct((n, E), jnp.int32)
+            qv = jax.ShapeDtypeStruct((Q,), jnp.int32)
+            if name.endswith("-sorted"):
+                # §Perf iteration: sorted-key searchsorted intersection
+                from repro.core.device_index import _query_batch_sorted
+
+                def qfn(ok, ik, s, t, m):
+                    return _query_batch_sorted(ok, ik, s, t, m,
+                                               num_mrs=72)
+
+                lowered = jax.jit(
+                    qfn, in_shardings=(rep,) * 2 + (qsh,) * 3,
+                    out_shardings=qsh,
+                ).lower(rows, rows, qv, qv, qv)
+            else:
+                from repro.core.device_index import _query_batch_ref
+                lowered = jax.jit(
+                    _query_batch_ref,
+                    in_shardings=(rep,) * 4 + (qsh,) * 3,
+                    out_shardings=qsh,
+                ).lower(rows, rows, rows, rows, qv, qv, qv)
+        compiled = lowered.compile()
+    t1 = time.time()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    terms = roofline_terms(flops_dev, bytes_dev, float(coll["total"]))
+    return {
+        "arch": name, "shape": "paper", "skipped": False,
+        "mesh": dict(mesh.shape), "chips": n_chips,
+        "compile_seconds": round(t1 - t0, 1),
+        "memory": {
+            "argument_bytes_per_dev": mem.argument_size_in_bytes,
+            "output_bytes_per_dev": mem.output_size_in_bytes,
+            "temp_bytes_per_dev": mem.temp_size_in_bytes,
+            "peak_bytes_per_dev": (mem.argument_size_in_bytes
+                                   + mem.output_size_in_bytes
+                                   + mem.temp_size_in_bytes),
+        },
+        "cost": {"flops_per_dev": flops_dev, "bytes_per_dev": bytes_dev,
+                 "hlo_flops_total": flops_dev * n_chips},
+        "collectives": coll,
+        "roofline": terms,
+    }
+
+
+# ------------------------------------------------------------------ #
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default="train_4k",
+                    choices=list(SHAPES) + ["paper"])
+    ap.add_argument("--mesh", type=str, default="pod",
+                    choices=["pod", "multipod"])
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every (arch x shape) cell on this mesh")
+    ap.add_argument("--out", type=str, default="benchmarks/artifacts/dryrun")
+    ap.add_argument("--microbatches", type=int, default=8,
+                    help="grad-accum microbatches for train cells (8 keeps "
+                    "the 256x4k global batch within 16G HBM)")
+    ap.add_argument("--ssm-chunk", type=int, default=0,
+                    help="override SSD chunk length (perf iteration)")
+    ap.add_argument("--moe-combine", type=str, default=None,
+                    choices=[None, "gather", "scatter"],
+                    help="override MoE combine formulation")
+    ap.add_argument("--attn-chunk", type=int, default=0,
+                    help="chunked online-softmax attention block size")
+    ap.add_argument("--remat", type=str, default=None)
+    args = ap.parse_args(argv)
+
+    assert len(jax.devices()) == 512, \
+        f"dry-run needs 512 placeholder devices, got {len(jax.devices())}"
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multipod"))
+    os.makedirs(args.out, exist_ok=True)
+
+    def run_one(arch, shape_name):
+        tag = f"{arch}__{shape_name}__{args.mesh}"
+        if args.remat:
+            tag += f"__remat-{args.remat}"
+        if args.microbatches != 1:
+            tag += f"__mb{args.microbatches}"
+        if args.ssm_chunk:
+            tag += f"__chunk{args.ssm_chunk}"
+        if args.moe_combine:
+            tag += f"__{args.moe_combine}"
+        if args.attn_chunk:
+            tag += f"__attnchunk{args.attn_chunk}"
+        path = os.path.join(args.out, tag + ".json")
+        try:
+            rec = lower_cell(arch, shape_name, mesh,
+                             microbatches=args.microbatches,
+                             remat=args.remat, ssm_chunk=args.ssm_chunk,
+                             moe_combine=args.moe_combine,
+                             attn_chunk=args.attn_chunk)
+            rec["status"] = "ok" if not rec.get("skipped") else "skipped"
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape_name, "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        status = rec.get("status")
+        extra = ""
+        if status == "ok":
+            r = rec.get("roofline", {})
+            extra = (f" dom={r.get('dominant')} "
+                     f"frac={r.get('roofline_fraction', 0):.3f} "
+                     f"compile={rec.get('compile_seconds')}s")
+        elif status == "skipped":
+            extra = f" ({rec.get('reason', '')[:60]})"
+        else:
+            extra = f" !! {rec.get('error', '')[:160]}"
+        print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+        return rec
+
+    if args.all:
+        from repro.configs import ASSIGNED
+        ok = True
+        for arch in ASSIGNED:
+            for shape_name in SHAPES:
+                rec = run_one(arch, shape_name)
+                ok &= rec.get("status") in ("ok", "skipped")
+        for rlc in RLC_CELLS:
+            rec = run_one(rlc, "paper")
+            ok &= rec.get("status") in ("ok", "skipped")
+        sys.exit(0 if ok else 1)
+    else:
+        rec = run_one(args.arch, args.shape)
+        if rec.get("status") == "ok":
+            print(json.dumps(
+                {k: rec[k] for k in ("memory", "cost", "collectives",
+                                     "roofline") if k in rec}, indent=1))
+        sys.exit(0 if rec.get("status") in ("ok", "skipped") else 1)
+
+
+if __name__ == "__main__":
+    main()

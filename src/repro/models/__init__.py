@@ -1,0 +1,6 @@
+from .builder import Builder, count_params, param_bytes
+from .lm import (decode_step, forward, init_cache, init_model, loss_fn,
+                 prefill)
+
+__all__ = ["Builder", "count_params", "param_bytes", "init_model",
+           "forward", "loss_fn", "init_cache", "prefill", "decode_step"]

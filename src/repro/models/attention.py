@@ -1,0 +1,324 @@
+"""Attention variants: GQA (+qk-norm, sliding window) and MLA (DeepSeek
+latent attention with absorbed decode), plus cross-attention for enc-dec.
+
+Cache layouts (serve path):
+  GQA   : {"k": (B, T, K, dh), "v": (B, T, K, dh)}         T = max seq
+  MLA   : {"ckv": (B, T, kv_lora), "krope": (B, T, dr)}    latent cache
+Sequence dim of caches is sharded over the ``model`` axis for long-context
+decode (sharding/partition.py ``cache_seq``); softmax over the sharded
+length is handled by XLA's partitioner.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.sharding.partition import constrain
+from .builder import Builder
+from .layers import (apply_linear, apply_rope, init_linear, rms_norm_heads,
+                     rope_angles)
+
+NEG = -1e30
+
+
+# ------------------------------------------------------------------ #
+# GQA
+# ------------------------------------------------------------------ #
+def init_gqa(b: Builder, cfg: ArchConfig, stack: Optional[int] = None,
+             name: str = "attn", cross: bool = False):
+    d, H, K, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    st = (stack,) if stack else ()
+    sta = ("layers",) if stack else ()
+    with b.scope(name):
+        init_linear(b, cfg, "wq", d, H * dh, ("fsdp", "heads"), stack)
+        init_linear(b, cfg, "wk", d, K * dh, ("fsdp", "kv"), stack)
+        init_linear(b, cfg, "wv", d, K * dh, ("fsdp", "kv"), stack)
+        init_linear(b, cfg, "wo", H * dh, d, ("heads", "fsdp"), stack)
+        if cfg.qk_norm and not cross:
+            b.param("q_norm", st + (dh,), sta + (None,), init="ones")
+            b.param("k_norm", st + (dh,), sta + (None,), init="ones")
+
+
+def _split_heads(x, n, dh):
+    return x.reshape(*x.shape[:-1], n, dh)
+
+
+def _attend_mha(q, k, v, mask):
+    """Head-sharded full attention (train/prefill). q/k/v: (B,S|T,H,dh) —
+    KV already repeated to H heads so the ``heads`` dim shards cleanly
+    over the ``model`` axis (the grouped 5D form forces the partitioner
+    into involuntary resharding when K < tp; see EXPERIMENTS.md §Perf)."""
+    dh = q.shape[-1]
+    q = constrain(q, ("act_batch", None, "act_heads", None))
+    k = constrain(k, ("act_batch", None, "act_heads", None))
+    v = constrain(v, ("act_batch", None, "act_heads", None))
+    scores = jnp.einsum("bshd,bthd->bhst", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(dh))
+    scores = constrain(scores, ("act_batch", "act_heads", None, None))
+    w = jax.nn.softmax(jnp.where(mask, scores, NEG).astype(jnp.float32),
+                       axis=-1)
+    ctx = jnp.einsum("bhst,bthd->bshd", w.astype(q.dtype), v)
+    return constrain(ctx, ("act_batch", None, "act_heads", None))
+
+
+def _attend_mha_chunked(q, k, v, chunk: int, window: int,
+                        q_offset: int = 0):
+    """Flash-style attention: KV streamed in chunks with an online
+    softmax; peak score memory is (B, H, S, chunk) instead of
+    (B, H, S, T). Pure JAX (lax.scan) so it lowers on any backend; the
+    Pallas VMEM-tiled version is the TPU deploy path (future kernel).
+
+    Causality from position math (q_pos = q_offset + i) — no (S, T)
+    mask tensor exists anywhere."""
+    B, S, H, dh = q.shape
+    T = k.shape[1]
+    nc = T // chunk
+    assert T % chunk == 0, (T, chunk)
+    f32 = jnp.float32
+    q = constrain(q, ("act_batch", None, "act_heads", None))
+    scale = 1.0 / jnp.sqrt(f32(dh))
+    kc = jnp.moveaxis(k.reshape(B, nc, chunk, H, dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nc, chunk, H, dh), 1, 0)
+    qpos = q_offset + jnp.arange(S)[:, None]            # (S, 1)
+
+    def body(carry, xs):
+        m, l, acc = carry                               # (B,H,S), ., (B,S,H,dh)
+        j, (kj, vj) = xs
+        kpos = j * chunk + jnp.arange(chunk)[None, :]   # (1, chunk)
+        ok = kpos <= qpos                               # (S, chunk)
+        if window:
+            ok &= kpos > qpos - window
+        s_j = jnp.einsum("bshd,bthd->bhst", q, kj,
+                         preferred_element_type=f32) * scale
+        s_j = jnp.where(ok[None, None], s_j, NEG)
+        m_new = jnp.maximum(m, s_j.max(-1))             # (B,H,S)
+        p = jnp.exp(s_j - m_new[..., None])             # (B,H,S,chunk)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1)
+        pv = jnp.einsum("bhst,bthd->bshd", p.astype(q.dtype), vj,
+                        preferred_element_type=f32)
+        acc = acc * jnp.moveaxis(corr, 1, 2)[..., None] + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, H, S), NEG, f32)
+    l0 = jnp.zeros((B, H, S), f32)
+    a0 = jnp.zeros((B, S, H, dh), f32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(nc), (kc, vc)))
+    out = acc / jnp.maximum(jnp.moveaxis(l, 1, 2)[..., None], 1e-30)
+    return constrain(out.astype(q.dtype),
+                     ("act_batch", None, "act_heads", None))
+
+
+def _attend_grouped(q, k, v, mask):
+    """Grouped decode attention: q (B,S,K,G,dh) vs the K-head cache
+    (B,T,K,dh); T (cache_seq) is the sharded dim."""
+    dh = q.shape[-1]
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(dh))
+    w = jax.nn.softmax(jnp.where(mask, scores, NEG).astype(jnp.float32),
+                       axis=-1)
+    ctx = jnp.einsum("bkgst,btkd->bskgd", w.astype(q.dtype), v)
+    return ctx
+
+
+def _causal_mask(S, T, offset, window):
+    """(S, T) bool: query i (at absolute pos offset+i) sees key j<=pos and
+    within the sliding window when set."""
+    qpos = offset + jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    m = kpos <= qpos
+    if window:
+        m &= kpos > qpos - window
+    return m
+
+
+def apply_gqa(p, x: jax.Array, cfg: ArchConfig, positions: jax.Array,
+              cache: Optional[Dict] = None, pos=None,
+              update_cache: bool = False
+              ) -> Tuple[jax.Array, Optional[Dict]]:
+    """Full (train/prefill) when ``cache is None`` or ``update_cache``;
+    single-step decode when ``cache`` is given with scalar ``pos``."""
+    B, S, d = x.shape
+    H, K, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    G = H // K
+    q = _split_heads(apply_linear(p["wq"], x, cfg), H, dh)
+    k = _split_heads(apply_linear(p["wk"], x, cfg), K, dh)
+    v = _split_heads(apply_linear(p["wv"], x, cfg), K, dh)
+    if cfg.qk_norm:
+        q = rms_norm_heads(p["q_norm"], q)
+        k = rms_norm_heads(p["k_norm"], k)
+    cos, sin = rope_angles(positions, dh, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    def _full(qh, kh, vh, T):
+        if cfg.attn_chunk and T > cfg.attn_chunk and T % cfg.attn_chunk == 0:
+            return _attend_mha_chunked(qh, kh, vh, cfg.attn_chunk,
+                                       cfg.sliding_window)
+        mask = _causal_mask(S, T, 0, cfg.sliding_window)[None, None]
+        return _attend_mha(qh, kh, vh, mask)
+
+    new_cache = None
+    if cache is None:
+        ctx = _full(q, jnp.repeat(k, G, axis=2),
+                    jnp.repeat(v, G, axis=2), S)
+    elif pos is None:
+        # prefill into a fresh cache of length T >= S
+        T = cache["k"].shape[1]
+        kc = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0))
+        ctx = _full(q, jnp.repeat(kc, G, axis=2),
+                    jnp.repeat(vc, G, axis=2), T)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        # decode: S == 1, absolute position ``pos`` (scalar int array);
+        # grouped form — cache keeps K heads, T shards over "model".
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], k, (0, pos.astype(jnp.int32), 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], v, (0, pos.astype(jnp.int32), 0, 0))
+        T = kc.shape[1]
+        kpos = jnp.arange(T)[None, :]
+        m = kpos <= pos
+        if cfg.sliding_window:
+            m &= kpos > pos - cfg.sliding_window
+        mask = m[None, None, None]  # (1,1,1,1,T): broadcasts over S=1
+        ctx = _attend_grouped(q.reshape(B, S, K, G, dh), kc, vc, mask)
+        ctx = ctx.reshape(B, S, H, dh)
+        new_cache = {"k": kc, "v": vc}
+    out = apply_linear(p["wo"], ctx.reshape(B, S, H * dh), cfg)
+    return out, new_cache
+
+
+# ------------------------------------------------------------------ #
+# Cross-attention (enc-dec)
+# ------------------------------------------------------------------ #
+def apply_cross_attn(p, x: jax.Array, cfg: ArchConfig,
+                     enc_kv: Tuple[jax.Array, jax.Array]) -> jax.Array:
+    """x: (B,S,d) decoder; enc_kv: precomputed (k, v) (B,T,K,dh)."""
+    B, S, _ = x.shape
+    H, K, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    q = _split_heads(apply_linear(p["wq"], x, cfg), H, dh)
+    k, v = enc_kv
+    G = H // K
+    mask = jnp.ones((1, 1, 1, k.shape[1]), bool)
+    ctx = _attend_mha(q, jnp.repeat(k, G, axis=2),
+                      jnp.repeat(v, G, axis=2), mask)
+    return apply_linear(p["wo"], ctx.reshape(B, S, H * dh), cfg)
+
+
+def encoder_kv(p, enc_out: jax.Array, cfg: ArchConfig):
+    K, dh = cfg.num_kv_heads, cfg.head_dim_
+    k = _split_heads(apply_linear(p["wk"], enc_out, cfg), K, dh)
+    v = _split_heads(apply_linear(p["wv"], enc_out, cfg), K, dh)
+    return k, v
+
+
+# ------------------------------------------------------------------ #
+# MLA (DeepSeek-V3)
+# ------------------------------------------------------------------ #
+def init_mla(b: Builder, cfg: ArchConfig, stack: Optional[int] = None,
+             name: str = "attn"):
+    d, H = cfg.d_model, cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ql, kl = cfg.q_lora_rank, cfg.kv_lora_rank
+    st = (stack,) if stack else ()
+    sta = ("layers",) if stack else ()
+    with b.scope(name):
+        init_linear(b, cfg, "wq_a", d, ql, ("fsdp", "lora"), stack)
+        b.param("q_ln", st + (ql,), sta + (None,), init="ones")
+        init_linear(b, cfg, "wq_b", ql, H * (dn + dr), ("lora", "heads"),
+                    stack)
+        init_linear(b, cfg, "wkv_a", d, kl + dr, ("fsdp", "lora"), stack)
+        b.param("kv_ln", st + (kl,), sta + (None,), init="ones")
+        b.param("wk_b", st + (kl, H, dn), sta + ("lora", "heads", None))
+        b.param("wv_b", st + (kl, H, dv), sta + ("lora", "heads", None))
+        init_linear(b, cfg, "wo", H * dv, d, ("heads", "fsdp"), stack)
+
+
+def _mla_qkv(p, x, cfg, positions):
+    """Shared q / latent computation. Returns q_nope (B,S,H,dn),
+    q_rope (B,S,H,dr), ckv (B,S,kl), krope (B,S,dr)."""
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    kl = cfg.kv_lora_rank
+    cq = apply_linear(p["wq_a"], x, cfg)
+    cq = rms_norm_heads(p["q_ln"], cq)
+    q = apply_linear(p["wq_b"], cq, cfg).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    kv = apply_linear(p["wkv_a"], x, cfg)
+    ckv, krope = kv[..., :kl], kv[..., kl:]
+    ckv = rms_norm_heads(p["kv_ln"], ckv)
+    cos, sin = rope_angles(positions, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    krope = apply_rope(krope[:, :, None, :], cos, sin)[:, :, 0, :]
+    return q_nope, q_rope, ckv, krope
+
+
+def apply_mla(p, x: jax.Array, cfg: ArchConfig, positions: jax.Array,
+              cache: Optional[Dict] = None, pos=None
+              ) -> Tuple[jax.Array, Optional[Dict]]:
+    """Prefill/train: materialized K/V per head. Decode: absorbed scores
+    against the latent cache (the MLA serving win — cache is
+    (kv_lora + rope_dim) per token instead of 2*H*dh)."""
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope, ckv, krope = _mla_qkv(p, x, cfg, positions)
+    scale = 1.0 / jnp.sqrt(jnp.float32(dn + dr))
+    new_cache = None
+
+    if cache is not None and pos is not None:
+        # ---- absorbed decode ----
+        ckv_c = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv, (0, pos.astype(jnp.int32), 0))
+        kr_c = jax.lax.dynamic_update_slice(
+            cache["krope"], krope, (0, pos.astype(jnp.int32), 0))
+        # q absorbed into latent space: (B,S,H,dn) x (kl,H,dn) -> (B,S,H,kl)
+        q_abs = jnp.einsum("bshn,khn->bshk", q_nope,
+                           p["wk_b"].astype(x.dtype))
+        s_nope = jnp.einsum("bshk,btk->bhst", q_abs, ckv_c,
+                            preferred_element_type=jnp.float32)
+        s_rope = jnp.einsum("bshr,btr->bhst", q_rope, kr_c,
+                            preferred_element_type=jnp.float32)
+        T = ckv_c.shape[1]
+        mask = (jnp.arange(T)[None, :] <= pos)[None, None]
+        scores = jnp.where(mask, (s_nope + s_rope) * scale, NEG)
+        w = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(x.dtype)
+        ctx_lat = jnp.einsum("bhst,btk->bshk", w, ckv_c)
+        ctx = jnp.einsum("bshk,khv->bshv", ctx_lat,
+                         p["wv_b"].astype(x.dtype))
+        new_cache = {"ckv": ckv_c, "krope": kr_c}
+    else:
+        # ---- train / prefill: materialize per-head K, V ----
+        q_nope = constrain(q_nope, ("act_batch", None, "act_heads", None))
+        k_nope = jnp.einsum("btk,khn->bthn", ckv, p["wk_b"].astype(x.dtype))
+        v = jnp.einsum("btk,khv->bthv", ckv, p["wv_b"].astype(x.dtype))
+        k_nope = constrain(k_nope, ("act_batch", None, "act_heads", None))
+        v = constrain(v, ("act_batch", None, "act_heads", None))
+        s_nope = jnp.einsum("bshn,bthn->bhst", q_nope, k_nope,
+                            preferred_element_type=jnp.float32)
+        s_rope = jnp.einsum("bshr,btr->bhst", q_rope, krope,
+                            preferred_element_type=jnp.float32)
+        mask = _causal_mask(S, S, 0, 0)[None, None]
+        scores = jnp.where(mask, (s_nope + s_rope) * scale, NEG)
+        scores = constrain(scores, ("act_batch", "act_heads", None, None))
+        w = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(x.dtype)
+        ctx = jnp.einsum("bhst,bthv->bshv", w, v)
+        ctx = constrain(ctx, ("act_batch", None, "act_heads", None))
+        if cache is not None:
+            T = cache["ckv"].shape[1]
+            ckv_c = jax.lax.dynamic_update_slice(cache["ckv"], ckv,
+                                                 (0, 0, 0))
+            kr_c = jax.lax.dynamic_update_slice(cache["krope"], krope,
+                                                (0, 0, 0))
+            new_cache = {"ckv": ckv_c, "krope": kr_c}
+    out = apply_linear(p["wo"], ctx.reshape(B, S, H * dv), cfg)
+    return out, new_cache

@@ -1,0 +1,95 @@
+"""Parameter builder: define each parameter once, get (params, logical axes).
+
+Model code calls ``b.param(name, shape, axes)`` inside nested scopes; the
+builder produces either real initialized arrays or ShapeDtypeStructs
+(``abstract=True`` — the dry-run path allocates nothing), plus a matching
+pytree of logical axis tuples consumed by :mod:`repro.sharding`.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+class Builder:
+    def __init__(self, key: Optional[jax.Array], abstract: bool = False,
+                 dtype=jnp.float32):
+        self._key = key
+        self.abstract = abstract
+        self.default_dtype = dtype
+        self.params: Dict[str, Any] = {}
+        self.axes: Dict[str, Any] = {}
+        self._scopes: list = []
+
+    # ---------------------------------------------------------------- #
+    @contextlib.contextmanager
+    def scope(self, name: str):
+        self._scopes.append(str(name))
+        try:
+            yield self
+        finally:
+            self._scopes.pop()
+
+    def _place(self, tree: Dict, name: str, value) -> None:
+        d = tree
+        for s in self._scopes:
+            d = d.setdefault(s, {})
+        assert name not in d, f"duplicate param {'/'.join(self._scopes + [name])}"
+        d[name] = value
+
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    # ---------------------------------------------------------------- #
+    def param(self, name: str, shape: Sequence[int], axes: Sequence,
+              init: str = "fan_in", fan_axis: int = -2,
+              dtype=None, scale: float = 1.0):
+        """Register one parameter.
+
+        init: 'fan_in' (normal, std=scale/sqrt(fan_in)), 'normal'
+        (std=scale), 'zeros', 'ones'. ``fan_axis`` picks the fan-in dim
+        for stacked (layers-first) params.
+        """
+        shape = tuple(int(s) for s in shape)
+        axes = tuple(axes)
+        assert len(shape) == len(axes), (name, shape, axes)
+        dtype = dtype or self.default_dtype
+        if self.abstract:
+            value = jax.ShapeDtypeStruct(shape, dtype)
+        elif init == "zeros":
+            value = jnp.zeros(shape, dtype)
+        elif init == "ones":
+            value = jnp.ones(shape, dtype)
+        else:
+            if init == "fan_in":
+                fan = shape[fan_axis] if len(shape) >= 2 else shape[0]
+                std = scale / math.sqrt(max(fan, 1))
+            else:
+                std = scale
+            value = (jax.random.normal(self._next_key(), shape, jnp.float32)
+                     * std).astype(dtype)
+        self._place(self.params, name, value)
+        self._place(self.axes, name, axes)
+        return value
+
+    def build(self) -> Tuple[PyTree, PyTree]:
+        return self.params, self.axes
+
+
+def count_params(params: PyTree) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(
+        params, is_leaf=lambda l: hasattr(l, "shape")))
+
+
+def param_bytes(params: PyTree) -> int:
+    return sum(int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+               for l in jax.tree.leaves(
+                   params, is_leaf=lambda l: hasattr(l, "shape")))

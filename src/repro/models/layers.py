@@ -1,0 +1,148 @@
+"""Shared neural layers: norms, RoPE, MLPs, embeddings."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.sharding.partition import constrain
+from .builder import Builder
+
+
+# ------------------------------------------------------------------ #
+# Norms
+# ------------------------------------------------------------------ #
+def init_norm(b: Builder, cfg: ArchConfig, name: str, dim: int,
+              stack: Optional[int] = None):
+    st = (stack,) if stack else ()
+    sta = ("layers",) if stack else ()
+    with b.scope(name):
+        b.param("scale", st + (dim,), sta + (None,), init="ones")
+        if cfg.norm == "layernorm":
+            b.param("bias", st + (dim,), sta + (None,), init="zeros")
+
+
+def apply_norm(p, x: jax.Array, cfg: ArchConfig, eps: float = 1e-5
+               ) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        var = (xf ** 2).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm_heads(scale: jax.Array, x: jax.Array, eps: float = 1e-6
+                   ) -> jax.Array:
+    """qk-norm: RMSNorm over the head_dim of (B, S, H, dh)."""
+    xf = x.astype(jnp.float32)
+    var = (xf ** 2).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ #
+# RoPE
+# ------------------------------------------------------------------ #
+def rope_angles(positions: jax.Array, dim: int, theta: float
+                ) -> Tuple[jax.Array, jax.Array]:
+    """(..., S) int positions -> cos/sin of shape (..., S, dim/2), f32."""
+    half = dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, dh); cos/sin: (B, S, dh/2). Half-split convention."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, :, None, :].astype(jnp.float32)
+    s = sin[:, :, None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * c - x2f * s, x2f * c + x1f * s], axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ #
+# Dense + MLP
+# ------------------------------------------------------------------ #
+def init_linear(b: Builder, cfg: ArchConfig, name: str, d_in: int,
+                d_out: int, axes: Tuple, stack: Optional[int] = None,
+                scale: float = 1.0):
+    st = (stack,) if stack else ()
+    sta = ("layers",) if stack else ()
+    with b.scope(name):
+        b.param("w", st + (d_in, d_out), sta + tuple(axes), scale=scale)
+        if cfg.use_bias:
+            bias_axes = (axes[-1],) if axes[-1] in ("heads", "kv", "ff",
+                                                    "vocab") else (None,)
+            b.param("b", st + (d_out,), sta + bias_axes, init="zeros")
+
+
+def apply_linear(p, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    y = jnp.matmul(x, p["w"].astype(x.dtype))
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def init_mlp(b: Builder, cfg: ArchConfig, d_ff: int,
+             stack: Optional[int] = None, name: str = "mlp"):
+    """SwiGLU (gate/up/down)."""
+    d = cfg.d_model
+    with b.scope(name):
+        init_linear(b, cfg, "gate", d, d_ff, ("fsdp", "ff"), stack)
+        init_linear(b, cfg, "up", d, d_ff, ("fsdp", "ff"), stack)
+        init_linear(b, cfg, "down", d_ff, d, ("ff", "fsdp"), stack)
+
+
+def apply_mlp(p, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    g = jax.nn.silu(apply_linear(p["gate"], x, cfg))
+    u = apply_linear(p["up"], x, cfg)
+    return apply_linear(p["down"], g * u, cfg)
+
+
+# ------------------------------------------------------------------ #
+# Embeddings / unembedding
+# ------------------------------------------------------------------ #
+def init_embeddings(b: Builder, cfg: ArchConfig):
+    V = cfg.padded_vocab
+    b.param("embed", (V, cfg.d_model), ("vocab", "embed"), init="normal",
+            scale=1.0)
+    if not cfg.tie_embeddings:
+        b.param("unembed", (cfg.d_model, V), ("embed", "vocab"))
+    if cfg.frontend != "none":
+        init_linear(b, cfg, "frontend_proj", cfg.frontend_dim, cfg.d_model,
+                    ("fsdp", "embed"))
+    if cfg.encoder_layers:
+        # decoder cross-attends encoder output; encoder gets its own stack
+        pass
+
+
+def embed_tokens(params, tokens: jax.Array, cfg: ArchConfig) -> jax.Array:
+    x = params["embed"].astype(cfg.dtype("compute"))[tokens]
+    return constrain(x, ("act_batch", None, None))
+
+
+def unembed(params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(x.dtype).T
+    else:
+        w = params["unembed"].astype(x.dtype)
+    logits = jnp.matmul(x, w)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    # mask padded vocab tail
+    V = cfg.padded_vocab
+    if V != cfg.vocab_size:
+        neg = jnp.finfo(logits.dtype).min
+        mask = jnp.arange(V) < cfg.vocab_size
+        logits = jnp.where(mask, logits, neg)
+    return logits

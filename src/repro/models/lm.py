@@ -1,0 +1,403 @@
+"""Model assembly: decoder-only LMs, MoE, SSM/hybrid, enc-dec, VLM prefix.
+
+One runtime for all 10 assigned architectures. A model is a sequence of
+*stages* (run-length-encoded block pattern); each stage's layer params are
+stacked on a leading ``layers`` axis and applied with ``lax.scan`` (+
+``jax.checkpoint`` remat). Zamba2's ``hybrid_attn`` blocks share ONE param
+set across occurrences (its defining trick) while keeping per-occurrence
+KV caches.
+
+Block kinds:
+  attn        pre-norm GQA/MLA + SwiGLU MLP           (dense archs)
+  moe         pre-norm GQA/MLA + MoE FFN              (llama4, deepseek)
+  ssm         pre-norm Mamba2 (no MLP)                (mamba2, zamba2)
+  hybrid_attn shared attention+MLP block              (zamba2)
+  xattn       self-attn + cross-attn + MLP            (whisper decoder)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.sharding.partition import constrain
+from .attention import (apply_cross_attn, apply_gqa, apply_mla, encoder_kv,
+                        init_gqa, init_mla)
+from .builder import Builder
+from .layers import (apply_mlp, apply_norm, embed_tokens, init_embeddings,
+                     init_mlp, init_norm, unembed)
+from .moe import apply_moe, init_moe
+from .ssm import apply_mamba2, init_mamba2
+
+PyTree = Any
+
+
+# ------------------------------------------------------------------ #
+# Init
+# ------------------------------------------------------------------ #
+def _init_attn_any(b: Builder, cfg: ArchConfig, stack):
+    if cfg.attention == "mla":
+        init_mla(b, cfg, stack)
+    else:
+        init_gqa(b, cfg, stack)
+
+
+def _init_block(b: Builder, cfg: ArchConfig, kind: str, stack: int):
+    st = stack if stack > 1 else None
+    if kind in ("attn", "moe", "xattn"):
+        init_norm(b, cfg, "norm1", cfg.d_model, st)
+        _init_attn_any(b, cfg, st)
+        if kind == "xattn":
+            init_norm(b, cfg, "norm_x", cfg.d_model, st)
+            init_gqa(b, cfg, st, name="xattn", cross=True)
+        init_norm(b, cfg, "norm2", cfg.d_model, st)
+        if kind == "moe":
+            init_moe(b, cfg, st)
+        else:
+            init_mlp(b, cfg, cfg.d_ff, st)
+    elif kind == "ssm":
+        init_norm(b, cfg, "norm", cfg.d_model, st)
+        init_mamba2(b, cfg, st)
+    else:
+        raise ValueError(kind)
+
+
+def init_model(cfg: ArchConfig, key: Optional[jax.Array] = None,
+               abstract: bool = False) -> Tuple[PyTree, PyTree]:
+    """Returns (params, logical-axes) pytrees."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    b = Builder(key, abstract=abstract, dtype=cfg.dtype("param"))
+    init_embeddings(b, cfg)
+    init_norm(b, cfg, "final_norm", cfg.d_model)
+    has_hybrid = any(k == "hybrid_attn" for k, _ in cfg.stages)
+    if has_hybrid:
+        with b.scope("shared_attn"):
+            init_norm(b, cfg, "norm1", cfg.d_model, None)
+            init_gqa(b, cfg, None)
+            init_norm(b, cfg, "norm2", cfg.d_model, None)
+            init_mlp(b, cfg, cfg.d_ff, None)
+    with b.scope("stages"):
+        for si, (kind, n) in enumerate(cfg.stages):
+            if kind == "hybrid_attn":
+                continue  # shared params above
+            with b.scope(f"s{si}"):
+                _init_block(b, cfg, kind, n)
+    if cfg.encoder_layers:
+        with b.scope("encoder"):
+            with b.scope("blocks"):
+                init_norm(b, cfg, "norm1", cfg.d_model, cfg.encoder_layers)
+                init_gqa(b, cfg, cfg.encoder_layers)
+                init_norm(b, cfg, "norm2", cfg.d_model, cfg.encoder_layers)
+                init_mlp(b, cfg, cfg.d_ff, cfg.encoder_layers)
+            init_norm(b, cfg, "final_norm", cfg.d_model)
+    return b.build()
+
+
+# ------------------------------------------------------------------ #
+# Blocks (apply)
+# ------------------------------------------------------------------ #
+def _apply_attn_any(p, x, cfg, positions, cache, pos):
+    if cfg.attention == "mla":
+        return apply_mla(p["attn"], x, cfg, positions, cache, pos)
+    return apply_gqa(p["attn"], x, cfg, positions, cache, pos)
+
+
+def _block_apply(kind: str, p, x, cfg: ArchConfig, positions,
+                 cache: Optional[Dict], pos, enc_kv=None):
+    """Returns (x_out, new_cache_dict)."""
+    new_cache: Dict = {}
+    if kind in ("attn", "moe", "hybrid_attn", "xattn"):
+        h = apply_norm(p["norm1"], x, cfg)
+        attn_cache = cache.get("attn") if cache else None
+        a, nc = _apply_attn_any(p, h, cfg, positions, attn_cache, pos)
+        if nc is not None:
+            new_cache["attn"] = nc
+        x = x + a
+        if kind == "xattn":
+            h = apply_norm(p["norm_x"], x, cfg)
+            x = x + apply_cross_attn(p["xattn"], h, cfg, enc_kv)
+        h = apply_norm(p["norm2"], x, cfg)
+        if kind == "moe":
+            f, aux = apply_moe(p["moe"], h, cfg)
+        else:
+            f, aux = apply_mlp(p["mlp"], h, cfg), jnp.float32(0)
+        x = x + f
+        return x, new_cache, aux
+    elif kind == "ssm":
+        h = apply_norm(p["norm"], x, cfg)
+        ssm_cache = cache.get("ssm") if cache else None
+        s, nc = apply_mamba2(p["ssm"], h, cfg, ssm_cache, pos)
+        if nc is not None:
+            new_cache["ssm"] = nc
+        return x + s, new_cache, jnp.float32(0)
+    raise ValueError(kind)
+
+
+def _run_stages(params, cfg: ArchConfig, x, positions,
+                cache: Optional[Dict], pos, enc_kv_tree=None,
+                with_cache: bool = False):
+    """Apply all stages; returns (x, new_cache, aux_total)."""
+    aux_total = jnp.float32(0)
+    new_cache: Dict = {}
+    remat_policy = None
+    if cfg.remat == "dots":
+        remat_policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+
+    for si, (kind, n) in enumerate(cfg.stages):
+        key = f"s{si}"
+        stage_cache = (cache or {}).get(key)
+        enc_kv = (enc_kv_tree or {}).get(key) if kind == "xattn" else None
+        if kind == "hybrid_attn":
+            p = params["shared_attn"]
+            assert n == 1, "hybrid stages are single occurrences"
+            x, nc, aux = _block_apply(kind, p, x, cfg, positions,
+                                      stage_cache, pos)
+            aux_total += aux
+            if with_cache:
+                new_cache[key] = nc
+            continue
+        p_stack = params["stages"][key]
+        if n == 1:
+            if kind == "xattn":
+                x, nc, aux = _block_apply(kind, p_stack, x, cfg, positions,
+                                          stage_cache, pos, enc_kv)
+            else:
+                x, nc, aux = _block_apply(kind, p_stack, x, cfg, positions,
+                                          stage_cache, pos)
+            aux_total += aux
+            if with_cache:
+                new_cache[key] = nc
+            continue
+
+        # scan over the stacked layers of this stage
+        def body(carry, xs):
+            h, aux_c = carry
+            p_layer, cache_layer, ekv_layer = xs
+            h2, nc, aux = _block_apply(kind, p_layer, h, cfg, positions,
+                                       cache_layer, pos, ekv_layer)
+            return (h2, aux_c + aux), nc
+
+        if cfg.remat != "none":
+            body = jax.checkpoint(body, policy=remat_policy,
+                                  prevent_cse=False)
+        # params define the scan length; cache/enc_kv thread through as
+        # stacked pytrees, or leafless {} when absent.
+        xs = (p_stack,
+              stage_cache if stage_cache is not None else {},
+              enc_kv if enc_kv is not None else {})
+        if cfg.scan_stages:
+            (x, aux_s), ncs = jax.lax.scan(body, (x, jnp.float32(0)), xs)
+        else:
+            # unrolled (dry-run/roofline path): identical math, flat HLO
+            ncs_list = []
+            aux_s = jnp.float32(0)
+            for i in range(n):
+                xs_i = jax.tree.map(lambda a: a[i], xs)
+                (x, aux_s), nc_i = body((x, aux_s), xs_i)
+                ncs_list.append(nc_i)
+            ncs = jax.tree.map(lambda *ls: jnp.stack(ls), *ncs_list) \
+                if ncs_list and jax.tree.leaves(ncs_list[0]) else {}
+        aux_total += aux_s
+        if with_cache:
+            new_cache[key] = ncs
+        x = constrain(x, ("act_batch", "act_seq", None))
+    return x, new_cache, aux_total
+
+
+# ------------------------------------------------------------------ #
+# Encoder (whisper) + frontend fusion
+# ------------------------------------------------------------------ #
+def _run_encoder(params, cfg: ArchConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, F, d_model) stub frame embeddings (already projected if
+    frontend_dim == d_model, else projected by frontend_proj)."""
+    x = frames
+    B, F, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(F)[None], (B, F))
+    enc = params["encoder"]
+
+    def body(h, p_layer):
+        a = apply_norm(p_layer["norm1"], h, cfg)
+        # non-causal self attention: reuse GQA with full mask via window=0
+        # and causal disabled by giving every query the final position.
+        out, _ = apply_gqa(p_layer["attn"], a, cfg,
+                           positions, None, None)
+        h = h + out
+        m = apply_norm(p_layer["norm2"], h, cfg)
+        h = h + apply_mlp(p_layer["mlp"], m, cfg)
+        return h, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body, prevent_cse=False)
+    if cfg.scan_stages:
+        x, _ = jax.lax.scan(body, x, enc["blocks"])
+    else:
+        for i in range(cfg.encoder_layers):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], enc["blocks"]))
+    return apply_norm(enc["final_norm"], x, cfg)
+
+
+def _fuse_frontend(params, cfg: ArchConfig, tok_embeds: jax.Array,
+                   frontend: Optional[jax.Array]):
+    """VLM early fusion: project patch embeddings and prepend."""
+    if frontend is None or cfg.frontend == "none":
+        return tok_embeds, 0
+    from .layers import apply_linear
+    fe = apply_linear(params["frontend_proj"], frontend.astype(
+        tok_embeds.dtype), cfg)
+    return jnp.concatenate([fe, tok_embeds], axis=1), fe.shape[1]
+
+
+# ------------------------------------------------------------------ #
+# Public entry points
+# ------------------------------------------------------------------ #
+def forward(params, cfg: ArchConfig, tokens: jax.Array,
+            frontend: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Full causal forward. Returns (logits, aux_loss). For enc-dec archs
+    ``frontend`` feeds the encoder; for VLM it prepends to the sequence."""
+    B, S = tokens.shape
+    x = embed_tokens(params, tokens, cfg)
+    enc_kv_tree = None
+    n_prefix = 0
+    if cfg.encoder_layers:
+        frames = frontend.astype(x.dtype)
+        enc_out = _run_encoder(params, cfg, frames)
+        enc_kv_tree = _enc_kv_tree(params, cfg, enc_out)
+    else:
+        x, n_prefix = _fuse_frontend(params, cfg, x, frontend)
+    Sp = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(Sp)[None], (B, Sp))
+    x, _, aux = _run_stages(params, cfg, x, positions, None, None,
+                            enc_kv_tree)
+    x = apply_norm(params["final_norm"], x, cfg)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    logits = unembed(params, x, cfg)
+    return logits, aux
+
+
+def _enc_kv_tree(params, cfg: ArchConfig, enc_out: jax.Array) -> Dict:
+    """Precompute per-stage cross-attention K/V from encoder output."""
+    tree = {}
+    for si, (kind, n) in enumerate(cfg.stages):
+        if kind != "xattn":
+            continue
+        p = params["stages"][f"s{si}"]
+        if n == 1:
+            tree[f"s{si}"] = encoder_kv(p["xattn"], enc_out, cfg)
+        else:
+            tree[f"s{si}"] = jax.vmap(
+                lambda pl: encoder_kv(pl["xattn"], enc_out, cfg))(p)
+    return tree
+
+
+def loss_fn(params, cfg: ArchConfig, batch: Dict) -> Tuple[jax.Array, Dict]:
+    """Next-token cross entropy (+ MoE aux). batch: tokens, labels
+    [, frontend]."""
+    logits, aux = forward(params, cfg, batch["tokens"],
+                          batch.get("frontend"))
+    labels = batch["labels"]
+    valid = (labels >= 0)
+    labels = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(valid.sum(), 1)
+    xent = -(ll * valid).sum() / denom
+    loss = xent + aux
+    return loss, {"loss": loss, "xent": xent, "aux": aux,
+                  "tokens": denom}
+
+
+# ------------------------------------------------------------------ #
+# Serving: cache init / prefill / decode
+# ------------------------------------------------------------------ #
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               abstract: bool = False) -> Tuple[PyTree, PyTree]:
+    """Returns (cache, logical-axes). Layout per stage; stacked on layers
+    for scanned stages."""
+    dt = cfg.dtype("compute")
+    H, K, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    di = cfg.d_inner
+    P, N, Hs = cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_heads
+    Wc = cfg.ssm_conv
+    dconv = di + 2 * cfg.ssm_groups * N
+
+    def mk(shape, dtype, axes):
+        arr = (jax.ShapeDtypeStruct(shape, dtype) if abstract
+               else jnp.zeros(shape, dtype))
+        return arr, axes
+
+    cache, axes = {}, {}
+    for si, (kind, n) in enumerate(cfg.stages):
+        key = f"s{si}"
+        lead = (n,) if n > 1 else ()
+        la = ("layers",) if n > 1 else ()
+        if kind in ("attn", "moe", "hybrid_attn", "xattn"):
+            if cfg.attention == "mla":
+                c1, a1 = mk(lead + (batch, max_len, cfg.kv_lora_rank), dt,
+                            la + ("act_batch", "cache_seq", None))
+                c2, a2 = mk(lead + (batch, max_len, cfg.qk_rope_dim), dt,
+                            la + ("act_batch", "cache_seq", None))
+                cache[key] = {"attn": {"ckv": c1, "krope": c2}}
+                axes[key] = {"attn": {"ckv": a1, "krope": a2}}
+            else:
+                ck, ak = mk(lead + (batch, max_len, K, dh), dt,
+                            la + ("act_batch", "cache_seq", "kv", None))
+                cv, av = mk(lead + (batch, max_len, K, dh), dt,
+                            la + ("act_batch", "cache_seq", "kv", None))
+                cache[key] = {"attn": {"k": ck, "v": cv}}
+                axes[key] = {"attn": {"k": ak, "v": av}}
+        elif kind == "ssm":
+            cc, ac = mk(lead + (batch, Wc - 1, dconv), dt,
+                        la + ("act_batch", None, "ff"))
+            cs, as_ = mk(lead + (batch, Hs, P, N), jnp.float32,
+                         la + ("act_batch", None, None, None))
+            cache[key] = {"ssm": {"conv": cc, "state": cs}}
+            axes[key] = {"ssm": {"conv": ac, "state": as_}}
+    return cache, axes
+
+
+def prefill(params, cfg: ArchConfig, tokens: jax.Array, cache: PyTree,
+            frontend: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, PyTree]:
+    """Run the full prompt, fill the cache. Returns (last-token logits,
+    cache)."""
+    B, S = tokens.shape
+    x = embed_tokens(params, tokens, cfg)
+    enc_kv_tree = None
+    n_prefix = 0
+    if cfg.encoder_layers:
+        enc_out = _run_encoder(params, cfg, frontend.astype(x.dtype))
+        enc_kv_tree = _enc_kv_tree(params, cfg, enc_out)
+    else:
+        x, n_prefix = _fuse_frontend(params, cfg, x, frontend)
+    Sp = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(Sp)[None], (B, Sp))
+    x, new_cache, _ = _run_stages(params, cfg, x, positions, cache, None,
+                                  enc_kv_tree, with_cache=True)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = unembed(params, x[:, -1:], cfg)
+    if enc_kv_tree is not None:
+        new_cache["enc_kv"] = enc_kv_tree
+    return logits, new_cache
+
+
+def decode_step(params, cfg: ArchConfig, cache: PyTree, token: jax.Array,
+                pos: jax.Array) -> Tuple[jax.Array, PyTree]:
+    """One decode step. token: (B, 1) int32; pos: scalar int32 (current
+    absolute position). Returns (logits (B,1,V), new cache)."""
+    B = token.shape[0]
+    x = embed_tokens(params, token, cfg)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    enc_kv_tree = cache.get("enc_kv") if isinstance(cache, dict) else None
+    x, new_cache, _ = _run_stages(params, cfg, x, positions, cache, pos,
+                                  enc_kv_tree, with_cache=True)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = unembed(params, x, cfg)
+    if enc_kv_tree is not None:
+        new_cache["enc_kv"] = enc_kv_tree
+    return logits, new_cache

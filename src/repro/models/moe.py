@@ -1,0 +1,145 @@
+"""Mixture-of-Experts layer: top-k router, shared + routed experts, EP.
+
+Dispatch is *gather-based* (zero-FLOP data movement instead of the
+(T, E, C) one-hot einsum, which would double the compiled FLOPs of the
+671B cell — see EXPERIMENTS.md §Perf): tokens are grouped (one group per
+sequence for train/prefill; one group for decode), each group scatters
+its top-k slot assignments into per-expert capacity buffers, experts run
+as one batched einsum sharded over the ``model`` axis (EP), and results
+gather back with router weights. Capacity overflow drops (standard
+token-dropping MoE); aux load-balance + router-z losses are returned.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.sharding.partition import constrain
+from .builder import Builder
+from .layers import apply_mlp, init_mlp
+
+
+def init_moe(b: Builder, cfg: ArchConfig, stack: Optional[int] = None,
+             name: str = "moe"):
+    d, E, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    st = (stack,) if stack else ()
+    sta = ("layers",) if stack else ()
+    with b.scope(name):
+        b.param("router", st + (d, E), sta + (None, None),
+                dtype=jnp.float32)
+        b.param("w_gate", st + (E, d, f), sta + ("experts", "fsdp", None))
+        b.param("w_up", st + (E, d, f), sta + ("experts", "fsdp", None))
+        b.param("w_down", st + (E, f, d), sta + ("experts", None, "fsdp"))
+        if cfg.num_shared_experts:
+            init_mlp(b, cfg, cfg.moe_d_ff * cfg.num_shared_experts,
+                     stack, name="shared")
+
+
+def _topk_with_slots(gates: jax.Array, top_k: int, capacity: int
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per group: gates (T, E) -> (expert_id, slot, weight) each (T, k).
+
+    Slot = position within the expert's capacity buffer, computed by a
+    cumulative count over the flattened (k, T) assignment order (slot
+    >= capacity drops the token for that expert).
+    """
+    T, E = gates.shape
+    w, idx = jax.lax.top_k(gates, top_k)            # (T, k)
+    # assignment order: slot priority by k first (primary routes win),
+    # then token order — matches standard dropping semantics.
+    flat = idx.T.reshape(-1)                        # (k*T,)
+    onehot = jax.nn.one_hot(flat, E, dtype=jnp.int32)   # (k*T, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1            # (k*T, E)
+    slot_flat = jnp.take_along_axis(pos, flat[:, None], axis=1)[:, 0]
+    slot = slot_flat.reshape(top_k, T).T            # (T, k)
+    return idx, slot, w
+
+
+def apply_moe(p, x: jax.Array, cfg: ArchConfig
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d). Returns (out, aux_loss)."""
+    B, S, d = x.shape
+    E, k, f = cfg.num_experts, cfg.top_k, cfg.moe_d_ff
+    xg = x.reshape(B, S, d)                          # groups = sequences
+    G, T = B, S
+    cap = max(4, int((T * k / E) * cfg.moe_capacity_factor))
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    gates = jax.nn.softmax(logits, axis=-1)          # (G, T, E)
+    idx, slot, w = jax.vmap(
+        lambda g: _topk_with_slots(g, k, cap))(gates)  # (G, T, k) each
+    w = w / (w.sum(-1, keepdims=True) + 1e-9)        # renormalize top-k
+
+    keep = slot < cap                                # (G, T, k)
+    # scatter token rows into (G, E*cap) dispatch buffers
+    flat_slot = idx * cap + slot                     # (G, T, k)
+    flat_slot = jnp.where(keep, flat_slot, E * cap)  # overflow bin
+    token_of_slot = jnp.full((G, E * cap + 1), T, jnp.int32)
+
+    def scatter_g(tos, fs):
+        src = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[:, None],
+                               fs.shape).reshape(-1)
+        return tos.at[fs.reshape(-1)].set(src, mode="drop")
+
+    token_of_slot = jax.vmap(scatter_g)(token_of_slot, flat_slot)
+    token_of_slot = token_of_slot[:, :E * cap]       # (G, E*cap)
+    # gather token activations into expert buffers (pad row = zeros)
+    xg_pad = jnp.concatenate([xg, jnp.zeros((G, 1, d), xg.dtype)], axis=1)
+    x_e = jnp.take_along_axis(
+        xg_pad, token_of_slot[:, :, None].astype(jnp.int32), axis=1)
+    x_e = x_e.reshape(G, E, cap, d)
+    x_e = constrain(x_e, (None, "act_experts", None, None))
+
+    # expert FFN (SwiGLU), EP-sharded over E
+    cdt = x.dtype
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", x_e,
+                               p["w_gate"].astype(cdt))) * \
+        jnp.einsum("gecd,edf->gecf", x_e, p["w_up"].astype(cdt))
+    y_e = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(cdt))
+    y_e = y_e.reshape(G, E * cap, d)
+
+    if cfg.moe_combine == "gather":
+        # gather back: token t takes its k slots, weighted. Crosses the
+        # EP shard boundary per token -> XLA all-gathers y_e (G, E*cap, d)
+        # (measured: dominates the 671B train cell's collective term).
+        safe_slot = jnp.where(keep, idx * cap + slot, 0)
+        y_tok = jnp.take_along_axis(
+            y_e, safe_slot.reshape(G, T * k)[:, :, None].astype(jnp.int32),
+            axis=1).reshape(G, T, k, d)
+        y = (y_tok * (w * keep)[..., None].astype(cdt)).sum(axis=2)
+    else:
+        # scatter-add combine (§Perf): each EP shard scatter-adds its own
+        # experts' outputs into (G, T, d) partials; the cross-shard sum is
+        # an all-reduce of (G, T, d) — E*cap/T smaller on the wire.
+        w_slot = jnp.zeros((G, E * cap + 1), jnp.float32)
+        w_flat = (w * keep).astype(jnp.float32)
+
+        def scatter_w(ws, fs, vals):
+            return ws.at[fs.reshape(-1)].set(vals.reshape(-1), mode="drop")
+
+        w_slot = jax.vmap(scatter_w)(w_slot, flat_slot, w_flat)
+        w_slot = w_slot[:, :E * cap]
+
+        def combine_g(ys, idxs, ws):
+            acc = jnp.zeros((T + 1, d), cdt)
+            return acc.at[idxs].add(ys * ws[:, None].astype(cdt),
+                                    mode="drop")[:T]
+
+        y = jax.vmap(combine_g)(y_e, token_of_slot, w_slot)
+    out = y.reshape(B, S, d)
+
+    if cfg.num_shared_experts:
+        out = out + apply_mlp(p["shared"], x, cfg)
+
+    # aux losses (computed over all tokens)
+    me = gates.mean(axis=(0, 1))                          # (E,)
+    onehot_primary = jax.nn.one_hot(idx[..., 0], E)       # (G, T, E)
+    ce = onehot_primary.mean(axis=(0, 1))
+    aux = cfg.router_aux_weight * E * jnp.sum(me * ce)
+    zl = cfg.router_z_weight * jnp.mean(
+        jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return out, aux + zl

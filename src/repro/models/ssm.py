@@ -1,0 +1,198 @@
+"""Mamba2 block — SSD (state-space duality) with chunked scan.
+
+Train/prefill: the sequence is split into chunks of length Q; the
+intra-chunk term is a masked (Q x Q) attention-like einsum (MXU work),
+the inter-chunk term a ``lax.scan`` carrying the (H, P, N) state — O(S)
+total, the sub-quadratic path that qualifies ssm/hybrid archs for the
+``long_500k`` cell. Decode: O(1) recurrent state update.
+
+State layout: x heads (B,S,H,P) with P = headdim; B/C projections per
+group (B,S,G,N) broadcast over H//G heads; scalar decay per head.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .builder import Builder
+
+
+def _dims(cfg: ArchConfig):
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    P = cfg.ssm_headdim
+    G = cfg.ssm_groups
+    N = cfg.ssm_state
+    return di, H, P, G, N
+
+
+def init_mamba2(b: Builder, cfg: ArchConfig, stack: Optional[int] = None,
+                name: str = "ssm"):
+    d = cfg.d_model
+    di, H, P, G, N = _dims(cfg)
+    dconv = di + 2 * G * N
+    st = (stack,) if stack else ()
+    sta = ("layers",) if stack else ()
+    with b.scope(name):
+        b.param("in_proj", st + (d, 2 * di + 2 * G * N + H),
+                sta + ("fsdp", "ff"))
+        b.param("conv_w", st + (cfg.ssm_conv, dconv), sta + (None, "ff"))
+        b.param("conv_b", st + (dconv,), sta + ("ff",), init="zeros")
+        b.param("dt_bias", st + (H,), sta + (None,), init="zeros")
+        b.param("A_log", st + (H,), sta + (None,), init="normal", scale=0.5)
+        b.param("D", st + (H,), sta + (None,), init="ones")
+        b.param("norm_w", st + (di,), sta + (None,), init="ones")
+        b.param("out_proj", st + (di, d), sta + ("ff", "fsdp"))
+
+
+def _split_in(zxbcdt, cfg: ArchConfig):
+    di, H, P, G, N = _dims(cfg)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * G * N]
+    dt = zxbcdt[..., -H:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, bias: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv, width W. xbc: (B,S,C); w: (W,C).
+    Returns (out, new_state) with state = last W-1 inputs."""
+    W = w.shape[0]
+    B, S, C = xbc.shape
+    if state is None:
+        state = jnp.zeros((B, W - 1, C), xbc.dtype)
+    xext = jnp.concatenate([state, xbc], axis=1)       # (B, S+W-1, C)
+    out = jnp.zeros((B, S, C), xbc.dtype)
+    for i in range(W):
+        out = out + xext[:, i:i + S, :] * w[i][None, None, :]
+    out = out + bias[None, None, :]
+    new_state = xext[:, -(W - 1):, :] if W > 1 else state
+    return jax.nn.silu(out), new_state
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int,
+                 mm_dtype=jnp.float32):
+    """SSD over chunks. xh: (b,S,H,P); dt: (b,S,H) (post-softplus);
+    A: (H,) negative; Bm/Cm: (b,S,G,N). Returns (y, final_state).
+
+    ``mm_dtype``: dtype of the intra-chunk matmuls and their (Q x Q)
+    intermediates (§Perf, zamba2 prefill cell — bf16 halves the dominant
+    HBM traffic; decay cumsums stay f32 for stability, accumulation is
+    f32 via preferred_element_type)."""
+    b, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = chunk
+    nc = S // Q
+    assert S % Q == 0, (S, Q)
+
+    f32 = jnp.float32
+    xc = xh.reshape(b, nc, Q, H, P)
+    dtc = dt.reshape(b, nc, Q, H).astype(f32)
+    Bh = jnp.repeat(Bm.reshape(b, nc, Q, G, N), rep, axis=3)  # (b,nc,Q,H,N)
+    Ch = jnp.repeat(Cm.reshape(b, nc, Q, G, N), rep, axis=3)
+
+    dA = dtc * A.astype(f32)[None, None, None, :]       # (b,nc,Q,H) <= 0
+    cum = jnp.cumsum(dA, axis=2)                        # inclusive
+
+    # intra-chunk (quadratic within Q only)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (b,nc,Q,Q,H)
+    mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])
+    LL = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0
+                   ).astype(mm_dtype)
+    scores = jnp.einsum("bnqhi,bnkhi->bnqkh", Ch.astype(mm_dtype),
+                        Bh.astype(mm_dtype),
+                        preferred_element_type=f32).astype(mm_dtype)
+    M = scores * LL * dtc[:, :, None, :, :].astype(mm_dtype)
+    y_intra = jnp.einsum("bnqkh,bnkhp->bnqhp", M, xc.astype(mm_dtype),
+                         preferred_element_type=f32)
+
+    # per-chunk end states
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)        # (b,nc,Q,H)
+    wgt = (dtc * decay_end).astype(mm_dtype)            # (b,nc,Q,H)
+    state_c = jnp.einsum("bnkh,bnkhi,bnkhp->bnhpi", wgt,
+                         Bh.astype(mm_dtype), xc.astype(mm_dtype),
+                         preferred_element_type=f32)    # (b,nc,H,P,N)
+
+    # inter-chunk scan
+    chunk_decay = jnp.exp(cum[:, :, -1, :])             # (b,nc,H)
+
+    def scan_fn(h, inp):
+        s_c, dec = inp                                  # (b,H,P,N), (b,H)
+        h_prev = h
+        h = h * dec[:, :, None, None] + s_c
+        return h, h_prev
+
+    h0 = jnp.zeros((b, H, P, N), f32)
+    hT, h_prevs = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(state_c, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)               # (b,nc,H,P,N)
+
+    y_inter = jnp.einsum(
+        "bnqhi,bnhpi->bnqhp",
+        (Ch.astype(f32) * jnp.exp(cum)[..., None]).astype(mm_dtype),
+        h_prevs.astype(mm_dtype), preferred_element_type=f32)
+    y = (y_intra + y_inter).reshape(b, S, H, P)
+    return y.astype(xh.dtype), hT
+
+
+def apply_mamba2(p, x: jax.Array, cfg: ArchConfig,
+                 cache: Optional[Dict] = None, pos=None
+                 ) -> Tuple[jax.Array, Optional[Dict]]:
+    """cache = {"conv": (B, W-1, dconv), "state": (B,H,P,N)}; decode when
+    ``pos`` is given (S must be 1)."""
+    B, S, d = x.shape
+    di, H, P, G, N = _dims(cfg)
+    cdt = x.dtype
+    zxbcdt = jnp.matmul(x, p["in_proj"].astype(cdt))
+    z, xbc, dt = _split_in(zxbcdt, cfg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+
+    new_cache = None
+    if cache is not None and pos is not None:
+        # ---- decode: O(1) state update ----
+        xbc_act, conv_state = _causal_conv(
+            xbc, p["conv_w"].astype(cdt), p["conv_b"].astype(cdt),
+            cache["conv"])
+        xh = xbc_act[..., :di].reshape(B, 1, H, P).astype(jnp.float32)
+        Bm = xbc_act[..., di:di + G * N].reshape(B, 1, G, N)
+        Cm = xbc_act[..., di + G * N:].reshape(B, 1, G, N)
+        rep = H // G
+        Bh = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)  # (B,1,H,N)
+        Ch = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+        dA = (dt[:, 0] * A[None, :])                    # (B,H)
+        h = cache["state"]                              # (B,H,P,N) f32
+        h = h * jnp.exp(dA)[:, :, None, None] + \
+            jnp.einsum("bh,bhi,bhp->bhpi", dt[:, 0], Bh[:, 0], xh[:, 0])
+        y = jnp.einsum("bhi,bhpi->bhp", Ch[:, 0], h)[:, None]  # (B,1,H,P)
+        new_cache = {"conv": conv_state, "state": h}
+        y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh
+    else:
+        xbc_act, conv_state = _causal_conv(
+            xbc, p["conv_w"].astype(cdt), p["conv_b"].astype(cdt))
+        xh = xbc_act[..., :di].reshape(B, S, H, P)
+        Bm = xbc_act[..., di:di + G * N].reshape(B, S, G, N)
+        Cm = xbc_act[..., di + G * N:].reshape(B, S, G, N)
+        y, hT = _ssd_chunked(xh, dt.astype(jnp.float32), A, Bm, Cm,
+                             min(cfg.ssm_chunk, S),
+                             mm_dtype=cfg.dtype("compute"))
+        y = y.astype(jnp.float32) + \
+            p["D"].astype(jnp.float32)[None, None, :, None] * \
+            xh.astype(jnp.float32)
+        if cache is not None:
+            new_cache = {"conv": conv_state, "state": hT}
+
+    # gated RMSNorm + out projection
+    yf = y.reshape(B, S, di)
+    gated = yf * jax.nn.silu(z.astype(jnp.float32))
+    var = (gated ** 2).mean(-1, keepdims=True)
+    yn = gated * jax.lax.rsqrt(var + 1e-6) * p["norm_w"].astype(jnp.float32)
+    out = jnp.matmul(yn.astype(cdt), p["out_proj"].astype(cdt))
+    return out, new_cache

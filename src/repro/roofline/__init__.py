@@ -1,0 +1,5 @@
+from .analysis import (HW, collective_bytes_from_hlo, model_flops,
+                       roofline_terms)
+
+__all__ = ["HW", "collective_bytes_from_hlo", "roofline_terms",
+           "model_flops"]

@@ -1,0 +1,147 @@
+"""Roofline analysis from compiled dry-run artifacts (assignment §Roofline).
+
+All compiled-module numbers (cost_analysis flops/bytes, HLO collective
+operand bytes) are PER-DEVICE — XLA compiles the SPMD-partitioned program
+(verified empirically: a (512,512,512) matmul on 8 devices reports
+2*512^3/8 flops). Therefore:
+
+    compute    = flops_per_dev / peak_flops_per_chip
+    memory     = bytes_per_dev / hbm_bw_per_chip
+    collective = collective_bytes_per_dev / ici_bw_per_chip
+
+ici_bw accounts for link count per chip on the 2D torus mesh axes.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+# TPU v5e-class hardware constants (assignment-specified)
+@dataclass(frozen=True)
+class _HW:
+    peak_flops: float = 197e12        # bf16 / chip
+    hbm_bw: float = 819e9             # B/s / chip
+    ici_bw_per_link: float = 50e9     # B/s / link (~)
+    ici_links: int = 4                # 2D torus: 4 links/chip
+
+
+HW = _HW()
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_LINE_RE = re.compile(
+    r"=\s+(?P<type>\(?[a-z0-9\[\],{}\s]*?\)?)\s*"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<phase>-start|-done)?\(")
+_TYPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str, default: int = 2) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))        # [num_groups, group_size]
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Per-device wire bytes per collective kind, from the per-device
+    SPMD module.
+
+    Compiled HLO prints only the OUTPUT type inline
+    (``%ag = f32[4,48] all-gather(%x), replica_groups=[16,16]<=[256]``),
+    so bytes-on-wire per device derive from output size O and group size
+    g via ring algorithms:
+      all-gather          O*(g-1)/g      (receives all but its own shard)
+      reduce-scatter      O*(g-1)        (input = O*g streams through)
+      all-reduce          2*O*(g-1)/g    (RS + AG phases)
+      all-to-all          O*(g-1)/g
+      collective-permute  O
+    ``-start`` counted, ``-done`` skipped (same transfer).
+    """
+    out: Dict[str, int] = {}
+    raw: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_LINE_RE.search(line)
+        if not m or m.group("phase") == "-done":
+            continue
+        kind = m.group("kind")
+        obytes = sum(_shape_bytes(d, s)
+                     for d, s in _TYPE_RE.findall(m.group("type")))
+        g = _group_size(line)
+        if kind == "all-gather":
+            wire = obytes * (g - 1) // g
+        elif kind == "reduce-scatter":
+            wire = obytes * (g - 1)
+        elif kind == "all-reduce":
+            wire = 2 * obytes * (g - 1) // g
+        elif kind == "all-to-all":
+            wire = obytes * (g - 1) // g
+        else:  # collective-permute
+            wire = obytes
+        out[kind] = out.get(kind, 0) + wire
+        raw[kind] = raw.get(kind, 0) + obytes
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    for k, v in raw.items():
+        out[f"raw_output_{k}"] = v
+    return out
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float, hw: _HW = HW
+                   ) -> Dict[str, float]:
+    compute = flops_per_dev / hw.peak_flops
+    memory = bytes_per_dev / hw.hbm_bw
+    collective = coll_bytes_per_dev / (hw.ici_bw_per_link * hw.ici_links)
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    bound = max(compute, memory, collective)
+    terms["dominant"] = dom
+    terms["roofline_fraction"] = compute / bound if bound > 0 else 0.0
+    return terms
+
+
+def model_flops(cfg, shape_kind: str, seq_len: int, global_batch: int,
+                n_params_active: int, n_params_embed: int = 0) -> float:
+    """MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (inference),
+    D = processed tokens. Embedding params excluded from N by convention."""
+    n = n_params_active - n_params_embed
+    if shape_kind == "train":
+        per_tok = 6 * n
+        tokens = seq_len * global_batch
+    elif shape_kind == "prefill":
+        per_tok = 2 * n
+        tokens = seq_len * global_batch
+    else:  # decode: one token per sequence
+        per_tok = 2 * n
+        tokens = global_batch
+    return float(per_tok) * float(tokens)
+
+
+def active_params(cfg, params_total: int) -> int:
+    """MoE: count routed experts once per top_k instead of num_experts."""
+    if cfg.num_experts and cfg.top_k:
+        expert_p = (3 * cfg.d_model * cfg.moe_d_ff) * cfg.num_experts
+        n_moe_layers = sum(1 for k in cfg.block_pattern if k == "moe")
+        all_experts = expert_p * n_moe_layers
+        active_experts = all_experts * cfg.top_k // cfg.num_experts
+        return params_total - all_experts + active_experts
+    return params_total

@@ -1,0 +1,366 @@
+"""HLO-text profiling tools for the dry-run perf loop (no real hardware:
+the optimized per-device HLO *is* the profile).
+
+``dot_flops_histogram`` attributes every dot/convolution's flops to its
+jax op_name (metadata), so a 3x-over-model-flops cell can be traced to
+the offending einsum. ``buffer_histogram`` ranks the largest tensors.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<type>\(?.*?\)?)\s*"
+    r"(?P<op>[\w\-]+)\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\](?:\{[^}]*\})?")
+_META_RE = re.compile(r'op_name="([^"]+)"')
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+
+def _parse_shapes(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(x) for x in dims.split(",")) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _numel(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+def _shorten(op_name: str) -> str:
+    """Collapse a jax op_name path to its meaningful tail."""
+    parts = [p for p in op_name.split("/") if p and not p.startswith("jit(")]
+    tail = parts[-3:] if len(parts) >= 3 else parts
+    return "/".join(tail)
+
+
+def parse_symbol_shapes(hlo_text: str) -> Dict[str, Tuple[str, Tuple]]:
+    """%name -> (dtype, shape) for every defined value."""
+    table: Dict[str, Tuple[str, Tuple]] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        shapes = _parse_shapes(m.group("type"))
+        if shapes:
+            table[m.group("name")] = shapes[0]
+    return table
+
+
+def dot_flops_histogram(hlo_text: str, top: int = 25
+                        ) -> List[Tuple[str, float, int]]:
+    """[(op_name tail, flops, count)] for dot ops, descending.
+
+    flops = 2 * numel(output) * prod(contracting dims of lhs). Operand
+    shapes come from the symbol table (HLO text annotates only outputs).
+    """
+    table = parse_symbol_shapes(hlo_text)
+    hist: Dict[str, List[float]] = defaultdict(lambda: [0.0, 0])
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m or m.group("op") != "dot":
+            continue
+        out_shapes = _parse_shapes(m.group("type"))
+        if not out_shapes:
+            continue
+        args_m = _OPERANDS_RE.search(line[m.end() - 1:])
+        cdims_m = _DOT_DIMS_RE.search(line)
+        if not args_m or not cdims_m:
+            continue
+        operands = [a.strip().lstrip("%")
+                    for a in args_m.group(1).split(",")]
+        lhs = table.get(operands[0])
+        if lhs is None:
+            continue
+        cdims = [int(x) for x in cdims_m.group(1).split(",") if x]
+        csize = 1
+        for cd in cdims:
+            if cd < len(lhs[1]):
+                csize *= lhs[1][cd]
+        flops = 2.0 * _numel(out_shapes[0][1]) * csize
+        meta = _META_RE.search(line)
+        key = _shorten(meta.group(1)) if meta else "<no-meta>"
+        hist[key][0] += flops
+        hist[key][1] += 1
+    rows = [(k, v[0], int(v[1])) for k, v in hist.items()]
+    rows.sort(key=lambda r: -r[1])
+    return rows[:top]
+
+
+def buffer_histogram(hlo_text: str, top: int = 25,
+                     min_bytes: int = 1 << 20
+                     ) -> List[Tuple[str, int, str]]:
+    """Largest tensors defined in the module: [(op_name tail, bytes,
+    'dtype[shape]')]."""
+    rows = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        shapes = _parse_shapes(m.group("type"))
+        if not shapes:
+            continue
+        total = sum(_numel(s) * _DTYPE_BYTES[d] for d, s in shapes)
+        if total < min_bytes:
+            continue
+        meta = _META_RE.search(line)
+        key = _shorten(meta.group(1)) if meta else m.group("op")
+        desc = ", ".join(f"{d}[{','.join(map(str, s))}]"
+                         for d, s in shapes[:2])
+        rows.append((key, total, desc))
+    rows.sort(key=lambda r: -r[1])
+    # dedupe identical (key, desc) keeping counts
+    agg: Dict[Tuple[str, str], List[int]] = defaultdict(lambda: [0, 0])
+    for k, b, d in rows:
+        agg[(k, d)][0] += b
+        agg[(k, d)][1] += 1
+    out = [(f"{k} x{c[1]}", c[0], d) for (k, d), c in agg.items()]
+    out.sort(key=lambda r: -r[1])
+    return out[:top]
+
+
+# ------------------------------------------------------------------ #
+# Computation-tree walk: exact totals under lax.scan (while loops)
+# ------------------------------------------------------------------ #
+_COMP_HDR_RE = re.compile(
+    r"^(?:ENTRY\s+)?%?(?P<name>[\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_WHILE_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_COLL_KIND_RE = re.compile(
+    r"=\s+(?P<type>\(?[a-z0-9\[\],{}\s]*?\)?)\s*"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<phase>-start|-done)?\(")
+
+_NO_TRAFFIC_OPS = {"parameter", "bitcast", "get-tuple-element", "tuple",
+                   "constant", "while", "conditional", "call"}
+
+
+def split_computations(hlo_text: str) -> Dict[str, List[str]]:
+    """computation name -> its body lines (text between braces).
+
+    Header lines end with ``{`` and contain ``->``; params may be nested
+    tuple types with ``/*index=N*/`` comments, so the name is taken as
+    the first (non-ENTRY) whitespace token."""
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    entry: Optional[str] = None
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.endswith("{") and "->" in s and not s.startswith("//"):
+            toks = s.split()
+            name = (toks[1] if toks[0] == "ENTRY" else toks[0])
+            name = name.lstrip("%")
+            i = name.find("(")
+            if i > 0:
+                name = name[:i]
+            cur = name
+            if toks[0] == "ENTRY":
+                entry = cur
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if s == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+    if entry is not None:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _line_dot_flops(line: str, table) -> float:
+    m = _DEF_RE.match(line)
+    if not m or m.group("op") != "dot":
+        return 0.0
+    out_shapes = _parse_shapes(m.group("type"))
+    args_m = _OPERANDS_RE.search(line[m.end() - 1:])
+    cdims_m = _DOT_DIMS_RE.search(line)
+    if not out_shapes or not args_m or not cdims_m:
+        return 0.0
+    lhs = table.get(args_m.group(1).split(",")[0].strip().lstrip("%"))
+    if lhs is None:
+        return 0.0
+    csize = 1
+    for cd in (int(x) for x in cdims_m.group(1).split(",") if x):
+        if cd < len(lhs[1]):
+            csize *= lhs[1][cd]
+    return 2.0 * _numel(out_shapes[0][1]) * csize
+
+
+def _line_coll_wire(line: str) -> Tuple[Optional[str], int]:
+    m = _COLL_KIND_RE.search(line)
+    if not m or m.group("phase") == "-done":
+        return None, 0
+    obytes = sum(_numel(s) * _DTYPE_BYTES[d]
+                 for d, s in _parse_shapes(m.group("type")))
+    g_m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    g = int(g_m.group(2)) if g_m else 2
+    kind = m.group("kind")
+    if kind == "all-gather":
+        return kind, obytes * (g - 1) // g
+    if kind == "reduce-scatter":
+        return kind, obytes * (g - 1)
+    if kind == "all-reduce":
+        return kind, 2 * obytes * (g - 1) // g
+    if kind == "all-to-all":
+        return kind, obytes * (g - 1) // g
+    return kind, obytes
+
+
+def _line_out_bytes(line: str) -> int:
+    m = _DEF_RE.match(line)
+    if not m or m.group("op") in _NO_TRAFFIC_OPS:
+        return 0
+    return sum(_numel(s) * _DTYPE_BYTES[d]
+               for d, s in _parse_shapes(m.group("type")))
+
+
+# ops that remain HBM-traffic after TPU-grade fusion: everything else
+# (elementwise chains, converts, broadcasts) fuses into these.
+_MEM_OPS = {
+    "dot", "convolution", "fusion", "reduce", "reduce-window", "gather",
+    "scatter", "dynamic-slice", "dynamic-update-slice", "copy",
+    "transpose", "sort", "all-gather", "all-reduce", "reduce-scatter",
+    "all-to-all", "collective-permute", "pad", "concatenate", "slice",
+    "iota", "rng-bit-generator", "select-and-scatter", "cholesky",
+    "triangular-solve",
+}
+
+
+def _line_fused_traffic(line: str, table) -> int:
+    """Fusion-aware HBM bytes: operands + outputs of memory-touching ops
+    (the TPU-optimistic floor; elementwise chains assumed fused away).
+
+    Sparse-access ops only touch the addressed region, not the whole
+    operand: gather/dynamic-slice read ~output bytes; dynamic-update-
+    slice/scatter read+write ~update bytes (operand 0 is aliased)."""
+    m = _DEF_RE.match(line)
+    if not m or m.group("op") not in _MEM_OPS:
+        return 0
+    op = m.group("op")
+    out = sum(_numel(s) * _DTYPE_BYTES[d]
+              for d, s in _parse_shapes(m.group("type")))
+    if op in ("gather", "dynamic-slice", "slice"):
+        return 2 * out                      # read region + write output
+    if op in ("dynamic-update-slice", "scatter"):
+        args_m = _OPERANDS_RE.search(line[m.end() - 1:])
+        upd = 0
+        if args_m:
+            ops_ = args_m.group(1).split(",")
+            if len(ops_) >= 2:
+                ent = table.get(ops_[1].strip().lstrip("%"))
+                if ent:
+                    upd = _numel(ent[1]) * _DTYPE_BYTES.get(ent[0], 0)
+        return 2 * upd                      # read-modify-write the region
+    args_m = _OPERANDS_RE.search(line[m.end() - 1:])
+    if args_m:
+        for a in args_m.group(1).split(","):
+            ent = table.get(a.strip().lstrip("%"))
+            if ent:
+                out += _numel(ent[1]) * _DTYPE_BYTES.get(ent[0], 0)
+    return out
+
+
+def scan_aware_totals(hlo_text: str) -> Dict[str, float]:
+    """Walk ENTRY -> fusions/calls/while-bodies, multiplying while bodies
+    by their trip count (parsed from the loop condition's constant).
+
+    Returns {"flops", "coll_<kind>", "coll_total", "hbm_bytes_est"}.
+    flops counts dots everywhere (fusion internals are real MXU work);
+    hbm_bytes_est counts top-level op outputs x2 (read+write approx),
+    skipping fusion internals (they stay in registers/VMEM).
+    """
+    comps = split_computations(hlo_text)
+    table = parse_symbol_shapes(hlo_text)
+
+    def trip_count(cond_name: str) -> int:
+        consts = [int(c) for line in comps.get(cond_name, [])
+                  for c in _CONST_RE.findall(line)]
+        return max(consts) if consts else 1
+
+    from functools import lru_cache
+
+    def walk(name: str, count_bytes: bool):
+        flops = 0.0
+        coll: Dict[str, float] = defaultdict(float)
+        bts = 0.0
+        fused = 0.0
+        for line in comps.get(name, []):
+            flops += _line_dot_flops(line, table)
+            kind, wire = _line_coll_wire(line)
+            if kind:
+                coll[kind] += wire
+            if count_bytes:
+                bts += _line_out_bytes(line)
+                fused += _line_fused_traffic(line, table)
+            if " while(" in line:
+                bm = _WHILE_BODY_RE.search(line)
+                if bm:
+                    tm = _TRIP_RE.search(line)
+                    if tm:
+                        t = int(tm.group(1))
+                    else:
+                        cm_ = _WHILE_COND_RE.search(line)
+                        t = trip_count(cm_.group(1)) if cm_ else 1
+                    f2, c2, b2, fu2 = walk(bm.group(1), count_bytes)
+                    flops += t * f2
+                    bts += t * b2
+                    fused += t * fu2
+                    for k, v in c2.items():
+                        coll[k] += t * v
+                continue
+            cm = _CALLS_RE.search(line)
+            if cm and " fusion(" in line:
+                # fusion internals: flops yes, hbm traffic no
+                f2, c2, _, _ = walk(cm.group(1), False)
+                flops += f2
+                for k, v in c2.items():
+                    coll[k] += v
+            elif cm and (" call(" in line or " conditional(" in line):
+                f2, c2, b2, fu2 = walk(cm.group(1), count_bytes)
+                flops += f2
+                bts += b2
+                fused += fu2
+                for k, v in c2.items():
+                    coll[k] += v
+        return flops, coll, bts, fused
+
+    entry = "__entry__" if "__entry__" in comps else next(iter(comps))
+    flops, coll, bts, fused = walk(entry, True)
+    out = {"flops": flops, "hbm_bytes_est": fused,
+           "hbm_bytes_upper": 2.0 * bts}
+    for k, v in coll.items():
+        out[f"coll_{k}"] = v
+    out["coll_total"] = sum(coll.values())
+    return out
+
+
+def op_bytes_by_kind(hlo_text: str) -> Dict[str, int]:
+    """Total output bytes per HLO op kind (coarse memory-traffic view)."""
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        shapes = _parse_shapes(m.group("type"))
+        total = sum(_numel(s) * _DTYPE_BYTES[d] for d, s in shapes)
+        out[m.group("op")] += total
+    return dict(sorted(out.items(), key=lambda kv: -kv[1]))

@@ -1,0 +1,62 @@
+"""Batched serving engine: prefill + greedy decode with jit'd steps.
+
+Minimal continuous-batching shape: fixed batch slots, one shared cache,
+prompts padded to a common length per batch. The decode step is the
+function the ``decode_*`` dry-run cells lower on the production mesh.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import decode_step, init_cache, prefill
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, max_len: int,
+                 batch_slots: int):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.batch_slots = batch_slots
+        self._prefill = jax.jit(
+            lambda p, t, c, fe: prefill(p, cfg, t, c, fe))
+        self._prefill_nofe = jax.jit(
+            lambda p, t, c: prefill(p, cfg, t, c))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(p, cfg, c, t, pos),
+            donate_argnums=(1,))
+
+    def generate(self, prompts: np.ndarray, steps: int,
+                 frontend: Optional[np.ndarray] = None) -> np.ndarray:
+        """prompts: (B, S0) int32. Greedy-decodes ``steps`` tokens."""
+        B, S0 = prompts.shape
+        assert B == self.batch_slots
+        cache, _ = init_cache(self.cfg, B, self.max_len)
+        if frontend is not None:
+            logits, cache = self._prefill(self.params,
+                                          jnp.asarray(prompts), cache,
+                                          jnp.asarray(frontend))
+        else:
+            logits, cache = self._prefill_nofe(self.params,
+                                               jnp.asarray(prompts), cache)
+        n_prefix = (self.cfg.frontend_len
+                    if (self.cfg.frontend != "none"
+                        and not self.cfg.encoder_layers) else 0)
+        outs = []
+        tok = jnp.argmax(logits[:, -1:, :self.cfg.vocab_size], axis=-1
+                         ).astype(jnp.int32)
+        outs.append(np.asarray(tok))
+        for i in range(steps - 1):
+            pos = jnp.int32(S0 + n_prefix + i)
+            logits, cache = self._decode(self.params, cache, tok, pos)
+            tok = jnp.argmax(logits[:, :, :self.cfg.vocab_size], axis=-1
+                             ).astype(jnp.int32)
+            outs.append(np.asarray(tok))
+        return np.concatenate(outs, axis=1)

@@ -1,0 +1,5 @@
+from .partition import (ACT_RULES, PARAM_RULES, constrain,
+                        logical_to_sharding, logical_to_spec)
+
+__all__ = ["PARAM_RULES", "ACT_RULES", "logical_to_spec",
+           "logical_to_sharding", "constrain"]

@@ -1,0 +1,5 @@
+from .optimizer import OptConfig, adamw_init, adamw_update, lr_schedule
+from .train_loop import TrainState, make_train_step, train_state_axes
+
+__all__ = ["OptConfig", "adamw_init", "adamw_update", "lr_schedule",
+           "TrainState", "make_train_step", "train_state_axes"]

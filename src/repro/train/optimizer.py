@@ -1,0 +1,103 @@
+"""AdamW (from scratch) with low-precision moment options + LR schedule.
+
+Distributed-optimization knobs (DESIGN §5):
+  * moment dtypes: bf16 first/second moments cut optimizer HBM 4x — the
+    difference between fitting and not fitting the 671B cell on v5e;
+  * global-norm clipping in f32 regardless of param dtype;
+  * decoupled weight decay; cosine schedule with linear warmup.
+Optimizer state inherits each parameter's sharding (FSDP over "data").
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    m_dtype: str = "bfloat16"
+    v_dtype: str = "bfloat16"
+    # bf16 gradient all-reduce (compression): cast grads before the DP
+    # reduction boundary.
+    grad_dtype: str = "bfloat16"
+
+
+def lr_schedule(oc: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(oc.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - oc.warmup_steps) /
+                 jnp.maximum(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = oc.min_lr_frac + (1 - oc.min_lr_frac) * cos
+    return oc.lr * warm * frac
+
+
+def adamw_init(params: PyTree, oc: OptConfig) -> Dict:
+    def zeros_like_dt(p, dt):
+        return jnp.zeros(p.shape, jnp.dtype(dt)) if not isinstance(
+            p, jax.ShapeDtypeStruct) else jax.ShapeDtypeStruct(
+                p.shape, jnp.dtype(dt))
+    return {
+        "m": jax.tree.map(lambda p: zeros_like_dt(p, oc.m_dtype), params),
+        "v": jax.tree.map(lambda p: zeros_like_dt(p, oc.v_dtype), params),
+        "step": (jnp.zeros((), jnp.int32)
+                 if not any(isinstance(l, jax.ShapeDtypeStruct)
+                            for l in jax.tree.leaves(params))
+                 else jax.ShapeDtypeStruct((), jnp.int32)),
+    }
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2)
+                        for l in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads: PyTree, state: Dict, params: PyTree,
+                 oc: OptConfig) -> Tuple[PyTree, Dict, Dict]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.clip_norm / (gnorm + 1e-9)) \
+        if oc.clip_norm else jnp.float32(1.0)
+    lr = lr_schedule(oc, step)
+    b1, b2 = jnp.float32(oc.b1), jnp.float32(oc.b2)
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mhat = m32 / c1
+        vhat = v32 / c2
+        delta = mhat / (jnp.sqrt(vhat) + oc.eps)
+        if oc.weight_decay and p.ndim >= 2:   # no decay on norms/bias
+            delta = delta + oc.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return (newp.astype(p.dtype), m32.astype(m.dtype),
+                v32.astype(v.dtype))
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics

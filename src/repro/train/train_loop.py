@@ -1,0 +1,119 @@
+"""train_step assembly: grad accumulation, clipping, AdamW, metrics.
+
+The returned ``train_step(state, batch)`` is pure and jit/pjit-friendly;
+``train_state_axes`` supplies the logical-axes pytree for sharding the
+whole state (params + moments inherit the same rules — FSDP over "data",
+TP over "model").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import init_model, loss_fn
+from repro.sharding.partition import PARAM_RULES, constrain
+from .optimizer import OptConfig, adamw_init, adamw_update
+
+PyTree = Any
+
+
+@dataclass
+class TrainState:
+    params: PyTree
+    opt: Dict
+    step: jax.Array
+
+    def tree_flatten(self):
+        return (self.params, self.opt, self.step), None
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt, s.step), None),
+    lambda _, c: TrainState(*c))
+
+
+def init_train_state(cfg: ArchConfig, oc: OptConfig,
+                     key: Optional[jax.Array] = None,
+                     abstract: bool = False) -> Tuple[TrainState, PyTree]:
+    params, axes = init_model(cfg, key, abstract=abstract)
+    opt = adamw_init(params, oc)
+    step = (jax.ShapeDtypeStruct((), jnp.int32) if abstract
+            else jnp.zeros((), jnp.int32))
+    state = TrainState(params, opt, step)
+    state_axes = TrainState(
+        axes,
+        {"m": axes, "v": axes, "step": ()},
+        ())
+    return state, state_axes
+
+
+def train_state_axes(cfg: ArchConfig) -> PyTree:
+    _, axes = init_model(cfg, abstract=True)
+    return TrainState(axes, {"m": axes, "v": axes, "step": ()}, ())
+
+
+def make_train_step(cfg: ArchConfig, oc: OptConfig,
+                    microbatches: int = 1) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    batch leaves are (B, ...) with B divisible by ``microbatches``; grads
+    accumulate in f32 across microbatches (lax.scan), then one AdamW
+    update. Grads cross the DP reduction in ``oc.grad_dtype`` (bf16
+    compression).
+    """
+
+    # grads + accumulator live in the PARAM sharding (FSDP/TP): the DP
+    # reduction lowers to reduce-scatter instead of a full all-reduce
+    # (§Perf, deepseek train cell — halves grad wire bytes and shards the
+    # f32 accumulator 16-way).
+    _, param_axes = init_model(cfg, abstract=True)
+
+    def _shard_like_params(tree):
+        return jax.tree.map(
+            lambda g, ax: constrain(g, ax, PARAM_RULES), tree, param_axes)
+
+    def single_grads(params, mb):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, mb)
+        grads = jax.tree.map(
+            lambda g: g.astype(jnp.dtype(oc.grad_dtype)), grads)
+        return _shard_like_params(grads), metrics
+
+    def train_step(state: TrainState, batch: Dict
+                   ) -> Tuple[TrainState, Dict]:
+        params = state.params
+        batch = jax.tree.map(
+            lambda x: constrain(x, ("act_batch",) + (None,) * (x.ndim - 1)),
+            batch)
+        if microbatches == 1:
+            grads, metrics = single_grads(params, batch)
+        else:
+            def split(x):
+                return x.reshape(microbatches, x.shape[0] // microbatches,
+                                 *x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                g, m = single_grads(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32), acc, g)
+                return _shard_like_params(acc), m
+
+            zero = _shard_like_params(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            grads, ms = jax.lax.scan(body, zero, mbs)
+            grads = jax.tree.map(lambda g: (g / microbatches).astype(
+                jnp.dtype(oc.grad_dtype)), grads)
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state.opt, params, oc)
+        metrics = dict(metrics, **opt_metrics)
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step

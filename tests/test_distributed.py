@@ -1,0 +1,102 @@
+"""Distributed build/query: 1-device in-process + 8-device subprocess."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.baselines import bfs_rlc
+from repro.core.distributed import (distributed_all_mr_reach,
+                                    distributed_build,
+                                    distributed_query_batch, make_rlc_mesh)
+from repro.core.dense import DenseEngine
+from repro.core.device_index import DeviceIndex
+from repro.core.index_builder import build_rlc_index
+from repro.core.minimum_repeat import enumerate_mrs, mr_id_space
+from repro.graphgen import random_labeled_graph
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_distributed_reach_single_device():
+    g = random_labeled_graph(num_vertices=11, num_edges=30, num_labels=2,
+                             seed=2, self_loop_frac=0.1)
+    mesh = make_rlc_mesh()
+    R = distributed_all_mr_reach(g, 2, mesh)
+    eng = DenseEngine.build(g, 2)
+    assert np.array_equal(R, eng.reach)
+
+
+def test_distributed_build_and_query_single_device():
+    g = random_labeled_graph(num_vertices=10, num_edges=28, num_labels=2,
+                             seed=4)
+    k = 2
+    mesh = make_rlc_mesh()
+    idx, _ = distributed_build(g, k, mesh, hub_batch=4)
+    dev = DeviceIndex.from_index(idx, g.num_labels)
+    ids = mr_id_space(g.num_labels, k)
+    qs, qt, qm, want = [], [], [], []
+    for s in range(g.num_vertices):
+        for t in range(g.num_vertices):
+            for L, c in ids.items():
+                qs.append(s)
+                qt.append(t)
+                qm.append(c)
+                want.append(bfs_rlc(g, s, t, L))
+    got = distributed_query_batch(dev, np.array(qs), np.array(qt),
+                                  np.array(qm), mesh)
+    assert got.tolist() == want
+
+
+SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, {src!r})
+    import numpy as np
+    import jax
+    assert len(jax.devices()) == 8
+    from repro.core.distributed import (distributed_all_mr_reach,
+                                        distributed_build,
+                                        distributed_query_batch,
+                                        make_rlc_mesh)
+    from repro.core.dense import DenseEngine
+    from repro.core.device_index import DeviceIndex
+    from repro.core.baselines import bfs_rlc
+    from repro.core.minimum_repeat import mr_id_space
+    from repro.graphgen import random_labeled_graph
+
+    g = random_labeled_graph(num_vertices=13, num_edges=40, num_labels=2,
+                             seed=9, self_loop_frac=0.1)
+    k = 2
+    mesh = make_rlc_mesh(data=4, pod=2)
+    R = distributed_all_mr_reach(g, k, mesh)
+    eng = DenseEngine.build(g, k)
+    assert np.array_equal(R, eng.reach), "sharded reach != single-device"
+
+    idx, _ = distributed_build(g, k, mesh, hub_batch=4)
+    dev = DeviceIndex.from_index(idx, g.num_labels)
+    ids = mr_id_space(g.num_labels, k)
+    qs, qt, qm, want = [], [], [], []
+    for s in range(g.num_vertices):
+        for t in range(g.num_vertices):
+            for L, c in ids.items():
+                qs.append(s); qt.append(t); qm.append(c)
+                want.append(bfs_rlc(g, s, t, L))
+    got = distributed_query_batch(dev, np.array(qs), np.array(qt),
+                                  np.array(qm), mesh)
+    assert got.tolist() == want, "distributed query mismatch"
+    print("OK-8DEV")
+""")
+
+
+@pytest.mark.slow
+def test_distributed_8_devices_subprocess():
+    src = os.path.join(ROOT, "src")
+    code = SUBPROC.format(src=src)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "OK-8DEV" in r.stdout

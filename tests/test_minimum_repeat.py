@@ -1,0 +1,103 @@
+"""Unit + property tests for minimum repeats, kernels and tails (paper §III-A,
+§IV, Lemmas 1-2, Theorem 1)."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.minimum_repeat import (count_mrs, enumerate_mrs,
+                                       failure_function, has_k_mr_path,
+                                       is_minimum_repeat, k_mr, kernel_tail,
+                                       minimum_repeat)
+
+seqs = st.lists(st.integers(0, 3), min_size=1, max_size=12).map(tuple)
+
+
+def brute_mr(seq):
+    n = len(seq)
+    for p in range(1, n + 1):
+        if n % p == 0 and seq[:p] * (n // p) == seq:
+            return seq[:p]
+    return seq
+
+
+@given(seqs)
+def test_mr_matches_bruteforce(seq):
+    assert minimum_repeat(seq) == brute_mr(seq)
+
+
+@given(seqs, st.integers(1, 4))
+def test_mr_of_power_is_mr(seq, z):
+    # Lemma 1 corollaries: MR(L^z) == MR(L); MR is idempotent.
+    assert minimum_repeat(seq * z) == minimum_repeat(seq)
+    assert minimum_repeat(minimum_repeat(seq)) == minimum_repeat(seq)
+
+
+@given(seqs)
+def test_mr_length_divides(seq):
+    assert len(seq) % len(minimum_repeat(seq)) == 0
+
+
+@given(seqs)
+def test_kernel_unique_and_consistent(seq):
+    """Definition 3 / Lemma 2: when a kernel exists it is unique; the
+    decomposition reconstructs the sequence."""
+    kt = kernel_tail(seq)
+    if kt is None:
+        return
+    kern, tail = kt
+    assert minimum_repeat(kern) == kern
+    assert len(tail) < len(kern)
+    h = (len(seq) - len(tail)) // len(kern)
+    assert h >= 2
+    assert kern * h + tail == seq
+    assert tail == kern[:len(tail)]
+
+
+def test_kernel_examples():
+    # (knows, knows, knows): kernel (knows), tail eps (paper example)
+    assert kernel_tail((0, 0, 0)) == ((0,), ())
+    # L1 = (knows x4) from Example 2
+    assert kernel_tail((0, 0, 0, 0)) == ((0,), ())
+    # (knows, worksFor, knows, worksFor): kernel (knows, worksFor)
+    assert kernel_tail((0, 1, 0, 1)) == ((0, 1), ())
+    # (a b a b a): kernel (a,b), tail (a)
+    assert kernel_tail((0, 1, 0, 1, 0)) == ((0, 1), (0,))
+    # no kernel
+    assert kernel_tail((0, 1, 2, 0)) is None
+    assert kernel_tail((0,)) is None
+
+
+@given(seqs, st.integers(1, 3))
+def test_k_mr(seq, k):
+    mr = minimum_repeat(seq)
+    assert k_mr(seq, k) == (mr if len(mr) <= k else None)
+
+
+def test_count_mrs_closed_form():
+    # paper §V-C: C = sum F(i), F(i) = |L|^i - sum_{j | i, j != i} F(j)
+    for num_labels in (1, 2, 3, 4, 8):
+        for k in (1, 2, 3):
+            assert count_mrs(num_labels, k) == len(
+                enumerate_mrs(num_labels, k))
+
+
+def test_enumerate_mrs_exact_small():
+    # |L|=2, k=2: (0), (1), (0,1), (1,0)  — (0,0) and (1,1) are not MRs
+    assert set(enumerate_mrs(2, 2)) == {(0,), (1,), (0, 1), (1, 0)}
+
+
+@given(st.lists(st.integers(0, 2), min_size=1, max_size=8).map(tuple),
+       st.lists(st.integers(0, 2), min_size=0, max_size=8).map(tuple),
+       st.integers(1, 3))
+def test_theorem1_case3(prefix_rest, rest, k):
+    """Theorem 1 Case 3 agrees with direct MR computation when |prefix|=2k."""
+    prefix = (prefix_rest * (2 * k))[:2 * k]  # force length 2k
+    full = prefix + rest
+    got = has_k_mr_path(prefix, rest, k)
+    mr = minimum_repeat(full)
+    want = mr if len(mr) <= k else None
+    if len(full) > 2 * k:
+        assert got == want

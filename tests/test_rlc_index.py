@@ -1,0 +1,207 @@
+"""Soundness + completeness of the RLC index (Theorems 2-3) against the
+product-automaton oracle and ETC, across random graph families."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.baselines import ETC, NFA, bfs_nfa, bfs_rlc, bibfs_rlc
+from repro.core.graph import LabeledGraph
+from repro.core.index_builder import (build_rlc_index,
+                                      build_rlc_index_with_stats)
+from repro.core.minimum_repeat import enumerate_mrs, mr_id_space
+from repro.graphgen import (barabasi_albert, erdos_renyi, fig1_graph,
+                            fig2_graph, random_labeled_graph)
+
+
+def exhaustive_check(g, k, idx=None, etc=None):
+    """Assert index answers == oracle for ALL (s, t, MR<=k) triples."""
+    idx = idx if idx is not None else build_rlc_index(g, k)
+    mrs = enumerate_mrs(g.num_labels, k)
+    for s in range(g.num_vertices):
+        for t in range(g.num_vertices):
+            for L in mrs:
+                want = bfs_rlc(g, s, t, L)
+                got = idx.query(s, t, L)
+                assert got == want, (
+                    f"mismatch s={s} t={t} L={L}: index={got} oracle={want}")
+                if etc is not None:
+                    assert etc.query(s, t, L) == want
+    return idx
+
+
+# ------------------------------------------------------------------ #
+# Paper illustration graphs
+# ------------------------------------------------------------------ #
+def test_fig2_running_example():
+    g, names = fig2_graph()
+    idx = build_rlc_index(g, k=2)
+    v = lambda s: names[s]
+    l1, l2 = 0, 1
+    # Example 4 queries
+    assert idx.query(v("v3"), v("v6"), (l2, l1)) is True   # Q1
+    assert idx.query(v("v1"), v("v2"), (l2, l1)) is True   # Q2
+    assert idx.query(v("v1"), v("v3"), (l1,)) is False     # Q3
+    exhaustive_check(g, 2, idx=idx)
+
+
+def test_fig2_condensed():
+    g, _ = fig2_graph()
+    idx = build_rlc_index(g, k=2)
+    assert idx.is_condensed()  # Theorem 2
+
+
+def test_fig1_motivating_queries():
+    g, names, labels = fig1_graph()
+    idx = build_rlc_index(g, k=3)
+    D, C, K, W = (labels[x] for x in
+                  ("debits", "credits", "knows", "worksFor"))
+    # Q1(A14, A19, (debits, credits)+) = true (Example 1)
+    assert idx.query(names["A14"], names["A19"], (D, C)) is True
+    # Q2(P10, P13, (knows, knows, worksFor)+) = false
+    assert idx.query(names["P10"], names["P13"], (K, K, W)) is False
+    exhaustive_check(g, 2, idx=build_rlc_index(g, k=2))
+
+
+# ------------------------------------------------------------------ #
+# Random graph sweeps (exhaustive oracle comparison)
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("k", [1, 2, 3])
+def test_random_graphs_sound_complete(seed, k):
+    g = random_labeled_graph(num_vertices=14, num_edges=40, num_labels=3,
+                             seed=seed, self_loop_frac=0.1)
+    etc = ETC(g, k)
+    exhaustive_check(g, k, etc=etc)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_er_graphs(seed):
+    g = erdos_renyi(num_vertices=20, avg_degree=2.5, num_labels=3, seed=seed)
+    exhaustive_check(g, 2)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_ba_graphs(seed):
+    g = barabasi_albert(num_vertices=16, m_attach=2, num_labels=3, seed=seed)
+    exhaustive_check(g, 2)
+
+
+def test_dense_cyclic_graph():
+    # dense + many self loops: the hardest regime (paper SO/WF graphs)
+    g = random_labeled_graph(num_vertices=8, num_edges=60, num_labels=2,
+                             seed=7, self_loop_frac=0.3)
+    etc = ETC(g, 3)
+    exhaustive_check(g, 3, etc=etc)
+
+
+def test_single_vertex_self_loops():
+    g = LabeledGraph.from_edges(1, 2, np.array([[0, 0, 0], [0, 1, 0]]))
+    idx = build_rlc_index(g, 2)
+    assert idx.query(0, 0, (0,))
+    assert idx.query(0, 0, (1,))
+    assert idx.query(0, 0, (0, 1))  # alternate loops: (0,1)^+ realizable
+    exhaustive_check(g, 2, idx=idx)
+
+
+def test_empty_and_edgeless_graph():
+    g = LabeledGraph.from_edges(3, 2, np.zeros((0, 3)))
+    idx = build_rlc_index(g, 2)
+    assert not idx.query(0, 1, (0,))
+    assert idx.num_entries() == 0
+
+
+# ------------------------------------------------------------------ #
+# Pruning rules: condensedness + ablations stay correct
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("seed", range(4))
+def test_condensed_property(seed):
+    g = random_labeled_graph(num_vertices=12, num_edges=34, num_labels=3,
+                             seed=seed)
+    idx = build_rlc_index(g, 2)
+    assert idx.is_condensed()
+
+
+def test_pruning_reduces_entries_but_not_answers():
+    g = random_labeled_graph(num_vertices=14, num_edges=50, num_labels=2,
+                             seed=3, self_loop_frac=0.15)
+    full, s_full = build_rlc_index_with_stats(g, 2)
+    nopr, s_nopr = build_rlc_index_with_stats(
+        g, 2, use_pr1=False, use_pr2=False, use_pr3=False)
+    assert full.num_entries() <= nopr.num_entries()
+    for s in range(g.num_vertices):
+        for t in range(g.num_vertices):
+            for L in enumerate_mrs(2, 2):
+                assert full.query(s, t, L) == nopr.query(s, t, L)
+    exhaustive_check(g, 2, idx=full)
+
+
+@pytest.mark.parametrize("flags", [
+    dict(use_pr1=False), dict(use_pr2=False), dict(use_pr3=False),
+    dict(use_pr1=False, use_pr3=False)])
+def test_pruning_ablations_sound_complete(flags):
+    g = random_labeled_graph(num_vertices=12, num_edges=40, num_labels=2,
+                             seed=11, self_loop_frac=0.2)
+    idx = build_rlc_index(g, 2, **flags)
+    exhaustive_check(g, 2, idx=idx)
+
+
+# ------------------------------------------------------------------ #
+# Frozen (merge-join) layout
+# ------------------------------------------------------------------ #
+def test_frozen_index_matches_dict_index():
+    g = random_labeled_graph(num_vertices=15, num_edges=45, num_labels=3,
+                             seed=5)
+    k = 2
+    idx = build_rlc_index(g, k)
+    ids = mr_id_space(g.num_labels, k)
+    frozen = idx.freeze(ids)
+    for s in range(g.num_vertices):
+        for t in range(g.num_vertices):
+            for L, mid in ids.items():
+                assert frozen.query(s, t, mid) == idx.query(s, t, L)
+
+
+# ------------------------------------------------------------------ #
+# Baselines agree with each other (BiBFS == BFS == NFA-BFS)
+# ------------------------------------------------------------------ #
+@given(st.integers(0, 10_000))
+@settings(max_examples=60, deadline=None)
+def test_bibfs_matches_bfs(seed):
+    rng = np.random.default_rng(seed)
+    g = random_labeled_graph(num_vertices=10, num_edges=26, num_labels=2,
+                             seed=seed, self_loop_frac=0.1)
+    s = int(rng.integers(10))
+    t = int(rng.integers(10))
+    for L in [(0,), (1,), (0, 1), (1, 0)]:
+        want = bfs_rlc(g, s, t, L)
+        assert bibfs_rlc(g, s, t, L) == want
+        nfa = NFA.from_plus_blocks([L])
+        assert bfs_nfa(g, s, t, nfa) == want
+
+
+def test_nfa_extended_query_q4():
+    # Q4 = a+ ∘ b+ on a tiny chain: 0 -a-> 1 -a-> 2 -b-> 3
+    g = LabeledGraph.from_edges(4, 2, np.array(
+        [[0, 0, 1], [1, 0, 2], [2, 1, 3]]))
+    nfa = NFA.from_plus_blocks([(0,), (1,)])
+    assert bfs_nfa(g, 0, 3, nfa) is True       # a a b
+    assert bfs_nfa(g, 0, 2, nfa) is False      # a a  (no b block)
+    assert bfs_nfa(g, 2, 3, nfa) is False      # b alone (no a block)
+
+
+# ------------------------------------------------------------------ #
+# ETC equals ground-truth S^k
+# ------------------------------------------------------------------ #
+def test_etc_sk_definition():
+    g, _ = fig2_graph()
+    etc = ETC(g, 2)
+    # S^2(P12,P16) analogue on fig2: check a couple of concrete sets
+    # against per-query oracle for every pair.
+    for s in range(g.num_vertices):
+        for t in range(g.num_vertices):
+            sk = etc.s_k(s, t)
+            for L in enumerate_mrs(g.num_labels, 2):
+                assert (L in sk) == bfs_rlc(g, s, t, L)

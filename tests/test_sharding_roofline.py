@@ -1,0 +1,126 @@
+"""Sharding rules (divisibility fallbacks, pod-axis filtering) and the
+roofline/HLO analysis machinery."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.roofline.analysis import (collective_bytes_from_hlo,
+                                     model_flops, roofline_terms)
+from repro.roofline.hlo_tools import (dot_flops_histogram,
+                                      scan_aware_totals,
+                                      split_computations)
+from repro.sharding.partition import (ACT_RULES, PARAM_RULES,
+                                      logical_to_spec)
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+def test_logical_to_spec_divisibility_fallback():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    # 48 heads shard 16 ways; 6 heads fall back to replication
+    assert logical_to_spec((1024, 6144), ("embed", "heads"), mesh,
+                           PARAM_RULES) == P(None, "model")
+    assert logical_to_spec((384, 6 * 64), ("embed", "heads"), mesh,
+                           PARAM_RULES) == P(None, "model")  # 384%16==0
+    assert logical_to_spec((10, 6), (None, "heads"), mesh,
+                           PARAM_RULES) == P(None, None)
+
+
+def test_logical_to_spec_pod_axis_filtering():
+    single = FakeMesh({"data": 16, "model": 16})
+    multi = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    # act_batch = ("pod","data"): filtered to data on single-pod
+    assert logical_to_spec((256, 128), ("act_batch", None), single,
+                           ACT_RULES) == P("data", None)
+    assert logical_to_spec((256, 128), ("act_batch", None), multi,
+                           ACT_RULES) == P(("pod", "data"), None)
+    # batch 8 not divisible by 32 -> replicate on multi
+    assert logical_to_spec((8, 128), ("act_batch", None), multi,
+                           ACT_RULES) == P(None, None)
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(197e12, 819e9 / 2, 0.0)  # 1s compute, 0.5s memory
+    assert t["dominant"] == "compute_s"
+    assert abs(t["roofline_fraction"] - 1.0) < 1e-9
+    t2 = roofline_terms(197e11, 819e9, 0.0)     # 0.1s compute, 1s memory
+    assert t2["dominant"] == "memory_s"
+    assert abs(t2["roofline_fraction"] - 0.1) < 1e-9
+
+
+def test_model_flops_shapes():
+    class C:
+        num_experts = 0
+        top_k = 0
+    n = 1_000_000
+    assert model_flops(C, "train", 128, 4, n) == 6 * n * 512
+    assert model_flops(C, "prefill", 128, 4, n) == 2 * n * 512
+    assert model_flops(C, "decode", 128, 4, n) == 2 * n * 4
+
+
+SAMPLE_HLO = """
+HloModule test
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body (p2: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p2 = (s32[], f32[8,8]) parameter(0)
+  %x = f32[8,8] get-tuple-element(%p2), index=1
+  %d = f32[8,8] dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ag = f32[8,8] all-gather(%d), channel_id=1, replica_groups=[4,2]<=[8], dimensions={0}
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  ROOT %t = (s32[], f32[8,8]) tuple(%i2, %ag)
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8] parameter(0)
+  %z = s32[] constant(0)
+  %init = (s32[], f32[8,8]) tuple(%z, %a)
+  %w = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[8,8] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_scan_aware_totals_on_synthetic_hlo():
+    tot = scan_aware_totals(SAMPLE_HLO)
+    # dot: 2*8*8*8 = 1024 flops, x12 trips
+    assert tot["flops"] == 12 * 1024
+    # all-gather: out 256B, g=2 -> wire 128B, x12
+    assert tot["coll_all-gather"] == 12 * 128
+    comps = split_computations(SAMPLE_HLO)
+    assert "__entry__" in comps and "body" in comps
+
+
+def test_collective_parser_kinds():
+    text = ("%x = f32[1024]{0} all-reduce(%y), replica_groups=[2,4]<=[8]\n"
+            "%z = bf16[64,32]{1,0} reduce-scatter(%w), "
+            "replica_groups=[1,8]<=[8]\n")
+    out = collective_bytes_from_hlo(text)
+    assert out["all-reduce"] == 2 * 4096 * 3 // 4
+    assert out["reduce-scatter"] == 64 * 32 * 2 * 7
+    assert out["total"] == out["all-reduce"] + out["reduce-scatter"]
+
+
+def test_scan_aware_matches_xla_on_real_compile():
+    """On a while-free program, the HLO walk's dot flops should match
+    XLA's cost analysis."""
+    def f(a, b):
+        return jnp.matmul(a, b)
+    sa = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    compiled = jax.jit(f).lower(sa, sa).compile()
+    tot = scan_aware_totals(compiled.as_text())
+    want = float(compiled.cost_analysis()["flops"])
+    assert abs(tot["flops"] - want) / want < 0.05

@@ -1,0 +1,212 @@
+"""Optimizer math, train loop, data pipeline, checkpointing, FT drills."""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import (CheckpointManager, latest_step,
+                              restore_pytree, save_pytree)
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticLMData
+from repro.ft import ElasticMeshManager, StragglerMonitor, resilient_loop
+from repro.train import OptConfig, adamw_init, adamw_update, lr_schedule
+from repro.train.train_loop import init_train_state, make_train_step
+
+
+# ------------------------------------------------------------------ #
+# Optimizer vs numpy reference
+# ------------------------------------------------------------------ #
+def test_adamw_matches_numpy_reference():
+    oc = OptConfig(lr=1e-2, warmup_steps=0, total_steps=100,
+                   min_lr_frac=1.0, weight_decay=0.1, clip_norm=0.0,
+                   m_dtype="float32", v_dtype="float32")
+    rng = np.random.default_rng(0)
+    p = {"w": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32)}
+    g = {"w": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32)}
+    state = adamw_init(p, oc)
+    new_p, new_state, _ = adamw_update(g, state, p, oc)
+    # numpy adam step 1
+    gw = np.asarray(g["w"])
+    m = 0.1 * gw
+    v = 0.05 * gw * gw
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.95)
+    want = np.asarray(p["w"]) - 1e-2 * (
+        mhat / (np.sqrt(vhat) + oc.eps) + 0.1 * np.asarray(p["w"]))
+    np.testing.assert_allclose(np.asarray(new_p["w"]), want, rtol=1e-5)
+
+
+def test_lr_schedule_shape():
+    oc = OptConfig(lr=1.0, warmup_steps=10, total_steps=110,
+                   min_lr_frac=0.1)
+    lrs = [float(lr_schedule(oc, jnp.int32(s))) for s in
+           [0, 5, 10, 60, 110, 200]]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 0.5) < 1e-6
+    assert abs(lrs[2] - 1.0) < 1e-6
+    assert 0.1 < lrs[3] < 1.0
+    assert abs(lrs[4] - 0.1) < 1e-6
+    assert abs(lrs[5] - 0.1) < 1e-6        # clamped past total_steps
+
+
+def test_clipping_bounds_update_norm():
+    oc = OptConfig(clip_norm=1e-3, weight_decay=0.0, warmup_steps=0,
+                   min_lr_frac=1.0, lr=1.0, m_dtype="float32",
+                   v_dtype="float32")
+    p = {"w": jnp.ones((8, 8), jnp.float32)}
+    g = {"w": jnp.full((8, 8), 100.0, jnp.float32)}
+    state = adamw_init(p, oc)
+    _, _, metrics = adamw_update(g, state, p, oc)
+    assert float(metrics["grad_norm"]) > 100
+
+
+# ------------------------------------------------------------------ #
+# Train step: loss goes down; microbatching equivalence
+# ------------------------------------------------------------------ #
+def test_train_loop_loss_decreases():
+    from repro.launch.train import run
+    _, history, _ = run("qwen3-0.6b-smoke", steps=20, batch=4, seq=64,
+                        log_every=1000)
+    assert history[-1] < history[0], history
+
+
+def test_microbatch_equivalence():
+    cfg = get_config("internlm2-1.8b-smoke")
+    oc = OptConfig(m_dtype="float32", v_dtype="float32",
+                   grad_dtype="float32")
+    state1, _ = init_train_state(cfg, oc, jax.random.PRNGKey(0))
+    state2 = jax.tree.map(lambda x: x, state1)
+    data = SyntheticLMData(cfg, DataConfig(seq_len=32, global_batch=8))
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+    s1, m1 = make_train_step(cfg, oc, microbatches=1)(state1, batch)
+    s2, m2 = make_train_step(cfg, oc, microbatches=4)(state2, batch)
+    for l1, l2 in zip(jax.tree.leaves(s1.params),
+                      jax.tree.leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   rtol=2e-4, atol=2e-5)
+
+
+# ------------------------------------------------------------------ #
+# Data pipeline
+# ------------------------------------------------------------------ #
+def test_data_determinism_and_sharding():
+    cfg = get_config("qwen3-0.6b-smoke")
+    d1 = SyntheticLMData(cfg, DataConfig(64, 8, seed=3))
+    d2 = SyntheticLMData(cfg, DataConfig(64, 8, seed=3))
+    b1, b2 = d1.batch_at(7), d2.batch_at(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(d1.batch_at(8)["tokens"], b1["tokens"])
+    # host sharding: different processes see different shards
+    da = SyntheticLMData(cfg, DataConfig(64, 8, seed=3, num_processes=2,
+                                         process_index=0))
+    db = SyntheticLMData(cfg, DataConfig(64, 8, seed=3, num_processes=2,
+                                         process_index=1))
+    assert da.batch_at(0)["tokens"].shape[0] == 4
+    assert not np.array_equal(da.batch_at(0)["tokens"],
+                              db.batch_at(0)["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+# ------------------------------------------------------------------ #
+# Checkpointing
+# ------------------------------------------------------------------ #
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": {"w": np.arange(6, dtype=np.float32).reshape(2, 3)},
+            "b": [np.int32(7), np.ones(4, np.float16)]}
+    save_pytree(str(tmp_path), 3, tree, extra={"note": "hi"})
+    assert latest_step(str(tmp_path)) == 3
+    restored, extra = restore_pytree(str(tmp_path), 3, tree)
+    assert extra == {"note": "hi"}
+    np.testing.assert_array_equal(restored["a"]["w"], tree["a"]["w"])
+    np.testing.assert_array_equal(restored["b"][1], tree["b"][1])
+    assert restored["b"][1].dtype == np.float16
+
+
+def test_checkpoint_manager_gc_and_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"x": np.zeros(3)}
+    for s in (1, 2, 3, 4):
+        mgr.save_async(s, {"x": np.full(3, s, np.float64)})
+    mgr.wait()
+    assert latest_step(str(tmp_path)) == 4
+    names = sorted(os.listdir(tmp_path))
+    assert names == ["step_00000003", "step_00000004"]
+    step, tree2, _ = mgr.restore_latest(tree)
+    assert step == 4 and tree2["x"][0] == 4
+
+
+def test_incomplete_checkpoint_ignored(tmp_path):
+    save_pytree(str(tmp_path), 1, {"x": np.zeros(2)})
+    # simulate a crash mid-write: directory without manifest
+    os.makedirs(tmp_path / "step_00000009")
+    assert latest_step(str(tmp_path)) == 1
+
+
+# ------------------------------------------------------------------ #
+# Fault tolerance drills
+# ------------------------------------------------------------------ #
+def test_resilient_loop_restart_bit_identical(tmp_path):
+    """Failure injected mid-run; the restarted run must converge to the
+    same final state as an uninterrupted run (pure data pipeline +
+    deterministic step)."""
+    def mk_step():
+        def step(state, batch):
+            s = state["s"] + batch["x"].sum()
+            return {"s": s, "n": state["n"] + 1}, {"loss": s}
+        return step
+
+    def batch_at(i):
+        return {"x": jnp.full((4,), float(i + 1), jnp.float32)}
+
+    init = {"s": jnp.float32(0), "n": jnp.int32(0)}
+    ref, _ = resilient_loop(mk_step(), init, batch_at, 30,
+                            str(tmp_path / "ref"), ckpt_every=7)
+    injected, rep = resilient_loop(
+        mk_step(), init, batch_at, 30, str(tmp_path / "inj"),
+        ckpt_every=7, fail_at={11: RuntimeError("node died"),
+                               23: RuntimeError("again")})
+    assert rep.restarts == 2
+    assert float(injected["s"]) == float(ref["s"])
+    assert int(injected["n"]) == int(ref["n"])
+
+
+def test_straggler_monitor_flags_outliers():
+    mon = StragglerMonitor(window=8, factor=2.0)
+    flagged = [mon.record(i, 0.1) for i in range(8)]
+    assert not any(flagged)
+    assert mon.record(9, 0.5) is True
+    assert mon.record(10, 0.11) is False
+
+
+def test_elastic_mesh_shrink():
+    em = ElasticMeshManager(model_parallel=1)
+    mesh = em.build()
+    assert mesh.shape["data"] == len(jax.devices())
+    # shrinking below a TP group raises
+    em2 = ElasticMeshManager(model_parallel=len(jax.devices()) + 1)
+    with pytest.raises(RuntimeError):
+        em2.build()
+
+
+def test_train_restart_resumes_from_checkpoint(tmp_path):
+    from repro.launch.train import run
+    # uninterrupted reference
+    s_ref, h_ref, _ = run("qwen3-0.6b-smoke", steps=12, batch=2, seq=32,
+                          ckpt_dir=str(tmp_path / "ref"), ckpt_every=4,
+                          log_every=1000)
+    # with two injected failures
+    s_inj, h_inj, rep = run("qwen3-0.6b-smoke", steps=12, batch=2, seq=32,
+                            ckpt_dir=str(tmp_path / "inj"), ckpt_every=4,
+                            fail_at={5: RuntimeError("kill"),
+                                     9: RuntimeError("kill2")},
+                            log_every=1000)
+    assert rep.restarts == 2
+    for a, b in zip(jax.tree.leaves(s_ref.params),
+                    jax.tree.leaves(s_inj.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6)

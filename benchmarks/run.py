@@ -24,7 +24,8 @@ def main(argv=None):
     os.makedirs(ART, exist_ok=True)
 
     from . import (bench_device, bench_graph_chars, bench_indexing,
-                   bench_k, bench_query, bench_scalability, bench_systems)
+                   bench_k, bench_query, bench_scalability, bench_service,
+                   bench_systems)
 
     suites = {
         "indexing": lambda: bench_indexing.run(quick),
@@ -35,6 +36,7 @@ def main(argv=None):
         "scalability": lambda: bench_scalability.run(quick),
         "systems": lambda: bench_systems.run(quick),
         "device": lambda: bench_device.run(quick),
+        "service": lambda: bench_service.run(quick),
     }
     failures = []
     for name, fn in suites.items():

@@ -1,0 +1,88 @@
+"""Online RLC query service, end to end on CPU.
+
+Builds the RLC index for a generated graph, stands up :class:`RLCService`
+(build -> freeze -> device layout -> serve), then answers a mixed
+true/false query stream — textual ``(label ...)+`` expressions included —
+through the result cache and micro-batching scheduler, checking every
+answer against the BiBFS oracle. Prints per-backend latency and the cache
+hit-rate.
+
+    PYTHONPATH=src python examples/online_service.py
+"""
+import sys
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core.baselines import bibfs_rlc
+from repro.core.queries import biased_true_queries
+from repro.graphgen import erdos_renyi
+from repro.service import ExpressionError, RLCService, ServiceConfig
+
+
+def main():
+    rng = np.random.default_rng(0)
+    g = erdos_renyi(num_vertices=250, avg_degree=3.5, num_labels=4, seed=42)
+    print(f"graph: {g.summary()}")
+
+    svc = RLCService.build(
+        g, ServiceConfig(k=2, batch_size=16, max_wait_ms=2.0,
+                         cache_capacity=512,
+                         label_names={"knows": 0, "worksFor": 1,
+                                      "debits": 2, "credits": 3}))
+    st = svc.stats()["index"]
+    print(f"index: {st['entries']} entries, {st['size_bytes']} bytes, "
+          f"C={st['num_mrs']} MRs, device={st['device']}")
+
+    # -- a few single queries through the textual parser ---------------- #
+    for expr in ["(knows)+", "(debits credits)+", "(0 1)+",
+                 '("knows worksFor")+']:
+        s, t = int(rng.integers(250)), int(rng.integers(250))
+        print(f"  Q({s}, {t}, {expr}) = {svc.query(s, t, expr)}")
+    try:
+        svc.query(0, 1, "(knows worksFor debits)+")   # |MR| = 3 > k = 2
+    except ExpressionError as e:
+        print(f"  rejected as expected: {e}")
+
+    # -- mixed true/false stream with Zipf popularity ------------------- #
+    qs = biased_true_queries(g, k=2, n=150, seed=7)
+    pool = qs.true_queries + qs.false_queries
+    rng.shuffle(pool)
+    w = np.arange(1, len(pool) + 1, dtype=np.float64) ** -1.0
+    w /= w.sum()
+    stream = [pool[i] for i in rng.choice(len(pool), size=1500, p=w)]
+    print(f"\nserving {len(stream)} requests "
+          f"({len(qs.true_queries)} true / {len(qs.false_queries)} false "
+          f"distinct queries, Zipf popularity) ...")
+
+    answers = []
+    for i in range(0, len(stream), 50):   # arrivals in chunks of 50
+        answers.extend(svc.query_batch(stream[i:i + 50]))
+
+    # verify against the oracle
+    wrong = sum(1 for (s, t, L), a in zip(stream, answers)
+                if a != bibfs_rlc(g, s, t, L))
+    n_true = sum(answers)
+    print(f"answers: {n_true} true / {len(answers) - n_true} false, "
+          f"{wrong} oracle mismatches")
+    assert wrong == 0
+
+    stats = svc.stats()
+    c = stats["cache"]
+    print(f"\ncache: {c['hits']} hits / {c['misses']} misses "
+          f"(hit-rate {c['hit_rate']:.1%}, {c['evictions']} evictions)")
+    sch = stats["scheduler"]
+    print(f"scheduler: {sch['batches_full']} full, "
+          f"{sch['batches_deadline']} deadline, "
+          f"{sch['batches_drain']} drain flushes")
+    print("backends:")
+    for name, b in stats["backends"].items():
+        print(f"  {name:7s} {b['batches']:4d} batches "
+              f"{b['queries']:5d} queries  p50 {b['p50_ms']:7.3f} ms  "
+              f"p99 {b['p99_ms']:7.3f} ms  {b['qps']:9.0f} q/s")
+    print(f"  fallbacks: {stats['fallbacks']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,10 +18,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .constants import PAD
 from .minimum_repeat import LabelSeq, mr_id_space
 from .rlc_index import FrozenRLCIndex, RLCIndex
-
-PAD = -1
 
 
 @dataclass
@@ -53,10 +52,19 @@ class DeviceIndex:
                    row_len: Optional[int] = None,
                    pad_to_multiple: int = 8) -> "DeviceIndex":
         ids = mr_id_space(num_labels, idx.k)
-        frozen = idx.freeze(ids)
+        return DeviceIndex.from_frozen(idx.freeze(ids), ids,
+                                       row_len=row_len,
+                                       pad_to_multiple=pad_to_multiple)
+
+    @staticmethod
+    def from_frozen(frozen: FrozenRLCIndex, mr_ids: Dict[LabelSeq, int],
+                    row_len: Optional[int] = None,
+                    pad_to_multiple: int = 8) -> "DeviceIndex":
+        """Device transfer of an already-frozen index (the service path
+        freezes once and reuses the CSR layout for the numpy backend)."""
         E = row_len or max(1, frozen.max_row)
         E = ((E + pad_to_multiple - 1) // pad_to_multiple) * pad_to_multiple
-        n = idx.num_vertices
+        n = frozen.num_vertices
 
         def pack(indptr, hub, mr):
             H = np.full((n, E), PAD, np.int32)
@@ -70,7 +78,7 @@ class DeviceIndex:
 
         oh, om = pack(frozen.out_indptr, frozen.out_hub, frozen.out_mr)
         ih, im = pack(frozen.in_indptr, frozen.in_hub, frozen.in_mr)
-        C = len(ids)
+        C = len(mr_ids)
 
         def keys(hub, mr):
             h = np.asarray(hub)
@@ -79,7 +87,7 @@ class DeviceIndex:
                            h.astype(np.int64) * C + m).astype(np.int32)
             return jnp.asarray(np.sort(key, axis=1))
 
-        return DeviceIndex(n, idx.k, E, oh, om, ih, im, ids, C,
+        return DeviceIndex(n, frozen.k, E, oh, om, ih, im, mr_ids, C,
                            keys(oh, om), keys(ih, im))
 
     # ---------------------------------------------------------------- #

@@ -14,7 +14,7 @@ import numpy as np
 
 from .baselines import bibfs_rlc
 from .graph import LabeledGraph
-from .minimum_repeat import LabelSeq, enumerate_mrs
+from .minimum_repeat import LabelSeq, enumerate_mrs, minimum_repeat
 
 
 @dataclass
@@ -53,21 +53,56 @@ def generate_queries(g: LabeledGraph, k: int, n_true: int = 1000,
     return QuerySet(tq, fq)
 
 
-def biased_true_queries(g: LabeledGraph, k: int, n: int, seed: int = 0
-                        ) -> QuerySet:
-    """Seed sources from actual edges so dense true sets exist even on very
-    sparse graphs (used by benchmarks to hit the n_true quota quickly)."""
+def biased_true_queries(g: LabeledGraph, k: int, n: int, seed: int = 0,
+                        n_false: Optional[int] = None) -> QuerySet:
+    """Seed true queries from short random walks so dense true sets exist
+    even on very sparse graphs (used by benchmarks to hit the n_true quota
+    quickly without the oracle).
+
+    A walk ``s -> ... -> t`` of length ``<= k`` spelling ``seq`` witnesses
+    ``s ~~MR(seq)^+~~> t`` (``seq`` is always a power of its own minimum
+    repeat), so every sampled walk yields a true query with an MR of length
+    up to ``k`` — not just single-label constraints. False queries are
+    uniform ``(s, t, L)`` triples over the walk-observed MR pool, verified
+    negative with the BiBFS oracle.
+    """
     rng = np.random.default_rng(seed)
-    mrs = enumerate_mrs(g.num_labels, k)
+    n_false = n if n_false is None else n_false
     tq: List[Tuple[int, int, LabelSeq]] = []
     fq: List[Tuple[int, int, LabelSeq]] = []
     m = g.num_edges
+    if m == 0:
+        return QuerySet(tq, fq)
+    seen_mrs: List[LabelSeq] = []
     attempts = 0
     while len(tq) < n and attempts < n * 100:
         attempts += 1
+        # random walk of target length 1..k from a random edge's source
         e = g.edges[int(rng.integers(m))]
-        s, lab, t = int(e[0]), int(e[1]), int(e[2])
-        L = (lab,)
-        if len(L) <= k:
-            tq.append((s, t, L))
+        s = int(e[0])
+        length = int(rng.integers(1, k + 1))
+        x, labels = s, []
+        for _ in range(length):
+            nbrs, labs = g.out_edges(x)
+            if len(nbrs) == 0:
+                break
+            j = int(rng.integers(len(nbrs)))
+            labels.append(int(labs[j]))
+            x = int(nbrs[j])
+        if not labels:
+            continue
+        L = minimum_repeat(tuple(labels))
+        if len(L) > k:          # unreachable (|walk| <= k) — belt and braces
+            continue
+        tq.append((s, x, L))
+        if L not in seen_mrs:
+            seen_mrs.append(L)
+    attempts = 0
+    while len(fq) < n_false and attempts < n_false * 200 and seen_mrs:
+        attempts += 1
+        s = int(rng.integers(g.num_vertices))
+        t = int(rng.integers(g.num_vertices))
+        L = seen_mrs[int(rng.integers(len(seen_mrs)))]
+        if not bibfs_rlc(g, s, t, L):
+            fq.append((s, t, L))
     return QuerySet(tq, fq)

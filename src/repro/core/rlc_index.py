@@ -209,6 +209,21 @@ class FrozenRLCIndex:
                 a, b = a2, b2
         return False
 
+    def query_batch(self, s: Sequence[int], t: Sequence[int],
+                    mr_id: Sequence[int]) -> np.ndarray:
+        """Vectorized-per-query Algorithm 1 over the flat numpy layout.
+
+        The frozen-numpy serving backend: no device transfer, no padding —
+        each query touches only its two CSR rows.
+        """
+        s = np.asarray(s)
+        t = np.asarray(t)
+        mr_id = np.asarray(mr_id)
+        out = np.zeros(len(s), dtype=bool)
+        for q in range(len(s)):
+            out[q] = self.query(int(s[q]), int(t[q]), int(mr_id[q]))
+        return out
+
     @property
     def max_row(self) -> int:
         return int(max(np.max(np.diff(self.out_indptr), initial=0),

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-PAD = -1
+from repro.core.constants import PAD
 
 
 def _mergejoin_kernel(s_ref, t_ref, mr_ref,       # scalar prefetch

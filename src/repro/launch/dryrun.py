@@ -32,7 +32,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES, cell_supported, get_config
 from repro.configs.rlc_paper import RLC_CELLS
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, mesh_context
 from repro.models import decode_step, init_cache, init_model, prefill
 from repro.models.builder import count_params
 from repro.roofline.analysis import (active_params,
@@ -134,7 +134,7 @@ def lower_cell(arch: str, shape_name: str, mesh, microbatches: int = 1,
 
     specs = input_specs(cfg, shape, mesh)
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         if shape.kind == "train":
             oc = OptConfig()
             state, state_axes = init_train_state(cfg, oc, abstract=True)
@@ -243,7 +243,7 @@ def lower_rlc_cell(name: str, mesh) -> Dict:
     cell = RLC_CELLS[name]
     n_chips = int(np.prod(list(mesh.shape.values())))
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         if cell.hub_batch:
             # one log-doubling closure step over the reachability matrix:
             # R | R @ R with R (C_mr batch folded into rows) row-sharded

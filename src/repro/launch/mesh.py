@@ -11,14 +11,22 @@ from typing import Optional, Tuple
 import jax
 
 
+def _make_mesh(shape, axes):
+    # jax.sharding.AxisType (and make_mesh's axis_types kwarg) only exist in
+    # newer jax; older installs default every axis to Auto anyway.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """(16, 16) = 256 chips/pod ("data", "model"); multi-pod adds the
     leading ("pod",) axis: (2, 16, 16) = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_elastic_mesh(data: int, model: int = 16, pod: int = 1):
@@ -26,15 +34,18 @@ def make_elastic_mesh(data: int, model: int = 16, pod: int = 1):
     (shrink 'data'; 'model' stays intact — see ft/elastic.py)."""
     shape = (pod, data, model) if pod > 1 else (data, model)
     axes = (("pod", "data", "model") if pod > 1 else ("data", "model"))
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
+
+
+def mesh_context(mesh):
+    """``jax.set_mesh(mesh)`` on new jax; the classic ``with mesh:``
+    physical-mesh context on jax 0.4.x (where set_mesh doesn't exist)."""
+    setter = getattr(jax, "set_mesh", None)
+    return setter(mesh) if setter is not None else mesh
 
 
 def make_host_mesh(model: int = 1):
     """Mesh over whatever devices exist (tests / CPU smoke)."""
     n = len(jax.devices())
     data = max(1, n // model)
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((data, model), ("data", "model"))

@@ -22,7 +22,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.data import DataConfig, SyntheticLMData
 from repro.ft import StragglerMonitor, resilient_loop
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, mesh_context
 from repro.sharding.partition import PARAM_RULES, tree_shardings
 from repro.train import OptConfig, make_train_step
 from repro.train.train_loop import init_train_state, train_state_axes
@@ -60,7 +60,7 @@ def run(arch: str, steps: int, batch: int, seq: int,
 
     if ckpt_dir:
         def wrapped(state, b):
-            with jax.set_mesh(mesh):
+            with mesh_context(mesh):
                 s, m = jit_step(state, b)
             history.append(float(m["loss"]))
             if len(history) % log_every == 0:
@@ -75,7 +75,7 @@ def run(arch: str, steps: int, batch: int, seq: int,
             ckpt_every=ckpt_every, monitor=monitor, fail_at=fail_at)
         return state, history, report
 
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         for step in range(steps):
             t0 = time.perf_counter()
             state, metrics = jit_step(state, batch_at(step))

@@ -102,8 +102,10 @@ def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int,
     # intra-chunk (quadratic within Q only)
     diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (b,nc,Q,Q,H)
     mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])
-    LL = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0
-                   ).astype(mm_dtype)
+    # mask BEFORE the exp: above-diagonal diff is positive and can overflow
+    # to +inf, and where(mask, inf, 0) back-propagates 0 * inf = NaN.
+    diff = jnp.where(mask[None, None, :, :, None], diff, -jnp.inf)
+    LL = jnp.exp(diff).astype(mm_dtype)
     scores = jnp.einsum("bnqhi,bnkhi->bnqkh", Ch.astype(mm_dtype),
                         Bh.astype(mm_dtype),
                         preferred_element_type=f32).astype(mm_dtype)

@@ -195,7 +195,13 @@ def _line_dot_flops(line: str, table) -> float:
     cdims_m = _DOT_DIMS_RE.search(line)
     if not out_shapes or not args_m or not cdims_m:
         return 0.0
-    lhs = table.get(args_m.group(1).split(",")[0].strip().lstrip("%"))
+    # Optimized HLO spells operands with their types —
+    # ``dot(f32[256,256]{1,0} %lhs, ...)`` — so a naive comma split lands
+    # inside the shape; take the first %-name (or bare name) token instead.
+    first_ref = re.search(r"%([\w.\-]+)", args_m.group(1))
+    lhs_name = (first_ref.group(1) if first_ref
+                else args_m.group(1).split(",")[0].strip())
+    lhs = table.get(lhs_name)
     if lhs is None:
         return 0.0
     csize = 1

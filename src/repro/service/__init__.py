@@ -1,0 +1,30 @@
+"""Online RLC query serving subsystem.
+
+Turns the offline index engines (:mod:`repro.core.rlc_index`,
+:mod:`repro.core.device_index`, :mod:`repro.kernels.mergejoin`) into a
+synchronous query service:
+
+* :mod:`repro.service.expr` — textual ``(l1 l2 ...)+`` constraint parser
+  with alphabet / ``k`` validation and minimum-repeat canonicalization;
+* :mod:`repro.service.cache` — LRU result cache (positive and negative
+  answers) with hit/miss accounting;
+* :mod:`repro.service.scheduler` — micro-batching scheduler that packs
+  requests into fixed-size padded batches bucketed by MR length;
+* :mod:`repro.service.executor` — multi-backend batch executor (python /
+  numpy / XLA-sorted / Pallas-dense) with automatic fallback;
+* :mod:`repro.service.service` — the :class:`RLCService` facade wiring
+  build -> freeze -> device transfer -> serve.
+"""
+from .cache import CacheStats, ResultCache
+from .executor import BACKENDS, BatchExecutor, ExecutorError
+from .expr import ExpressionError, PathExpression, parse_expression
+from .metrics import LatencyRecorder
+from .scheduler import Batch, MicroBatcher, Request
+from .service import RLCService, ServiceConfig
+
+__all__ = [
+    "BACKENDS", "Batch", "BatchExecutor", "CacheStats", "ExecutorError",
+    "ExpressionError", "LatencyRecorder", "MicroBatcher", "PathExpression",
+    "RLCService", "Request", "ResultCache", "ServiceConfig",
+    "parse_expression",
+]

@@ -1,0 +1,75 @@
+"""LRU result cache for RLC query answers.
+
+Keys are ``(s, t, mr_id)`` triples; values are booleans — *both* positive
+and negative answers are cached (a false reachability answer is exactly as
+expensive to recompute as a true one; the index is static between
+rebuilds, so negatives never go stale). Hit/miss/eviction counters feed
+the service stats and the Zipf-workload benchmark.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+Key = Tuple[int, int, int]  # (s, t, mr_id)
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def as_dict(self) -> dict:
+        return dict(hits=self.hits, misses=self.misses,
+                    evictions=self.evictions, hit_rate=self.hit_rate)
+
+
+class ResultCache:
+    """Bounded LRU mapping ``(s, t, mr_id) -> bool``."""
+
+    def __init__(self, capacity: int):
+        if capacity < 0:
+            raise ValueError(f"capacity must be >= 0, got {capacity}")
+        self.capacity = capacity
+        self._d: "OrderedDict[Key, bool]" = OrderedDict()
+        self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def get(self, key: Key) -> Optional[bool]:
+        """Answer if cached (refreshing recency), else ``None``."""
+        if self.capacity == 0:
+            self.stats.misses += 1
+            return None
+        try:
+            val = self._d[key]
+        except KeyError:
+            self.stats.misses += 1
+            return None
+        self._d.move_to_end(key)
+        self.stats.hits += 1
+        return val
+
+    def put(self, key: Key, value: bool) -> None:
+        if self.capacity == 0:
+            return
+        if key in self._d:
+            self._d.move_to_end(key)
+        self._d[key] = bool(value)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+            self.stats.evictions += 1
+
+    def clear(self) -> None:
+        self._d.clear()

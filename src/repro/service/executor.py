@@ -1,0 +1,143 @@
+"""Multi-backend batch executor for RLC query batches.
+
+One interface over the four existing engines:
+
+* ``python`` — dict-layout Algorithm 1 (:meth:`RLCIndex.query`), the
+  always-available reference;
+* ``numpy``  — frozen CSR merge-join (:meth:`FrozenRLCIndex.query_batch`);
+* ``sorted`` — XLA sorted-key intersection on the padded device layout
+  (:meth:`DeviceIndex.query_batch` with ``method="sorted"``);
+* ``pallas`` — the Pallas dense merge-join kernel (interpreted on CPU).
+
+Backends that need a :class:`DeviceIndex` degrade gracefully: when the
+device layout is absent or a device dispatch raises, the executor walks a
+fallback chain toward ``python`` and records which backend actually
+answered. Per-backend latency/throughput lands in
+:class:`repro.service.metrics.LatencyRecorder`.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.minimum_repeat import LabelSeq
+from repro.core.rlc_index import FrozenRLCIndex, RLCIndex
+
+from .metrics import LatencyRecorder
+
+# Preference order: fastest batched path first, reference last.
+BACKENDS = ("pallas", "sorted", "numpy", "python")
+
+
+def _on_cpu() -> bool:
+    try:
+        import jax
+        return jax.default_backend() == "cpu"
+    except Exception:
+        return True
+
+
+class ExecutorError(RuntimeError):
+    """Raised when no backend (including the fallbacks) can run a batch."""
+
+
+class BatchExecutor:
+    def __init__(self, index: RLCIndex,
+                 frozen: Optional[FrozenRLCIndex] = None,
+                 device_index=None,
+                 id_to_mr: Optional[Sequence[LabelSeq]] = None,
+                 backend: str = "auto"):
+        if backend != "auto" and backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {backend!r}; choose from "
+                f"{('auto',) + BACKENDS}")
+        self.index = index
+        self.frozen = frozen
+        self.device_index = device_index
+        self.id_to_mr = list(id_to_mr) if id_to_mr is not None else None
+        self.backend = backend
+        self.recorders: Dict[str, LatencyRecorder] = {
+            b: LatencyRecorder(b) for b in BACKENDS}
+        self.fallbacks = 0
+
+    # ------------------------------------------------------------------ #
+    def available(self, backend: str) -> bool:
+        if backend in ("pallas", "sorted"):
+            return self.device_index is not None
+        if backend == "numpy":
+            return self.frozen is not None
+        if backend == "python":
+            return self.id_to_mr is not None
+        return False
+
+    def resolve(self, backend: Optional[str] = None) -> str:
+        """Map ``auto`` (or None) to the best available backend."""
+        b = backend or self.backend
+        if b == "auto":
+            order = BACKENDS
+            if _on_cpu():
+                # the Pallas kernel only *interprets* on CPU — the XLA
+                # sorted-key path is the fast lowering there.
+                order = ("sorted", "numpy", "pallas", "python")
+            for cand in order:
+                if self.available(cand):
+                    return cand
+            raise ExecutorError("no backend available")
+        return b
+
+    # ------------------------------------------------------------------ #
+    def execute(self, s: np.ndarray, t: np.ndarray, mr_id: np.ndarray,
+                n_real: Optional[int] = None,
+                backend: Optional[str] = None) -> Tuple[np.ndarray, str]:
+        """Answer a padded batch; returns ``(answers[:n_real], backend)``.
+
+        Tries the requested backend, then every remaining backend in
+        ``BACKENDS`` order (a device failure must never fail the query —
+        the python reference can always answer).
+        """
+        first = self.resolve(backend)
+        chain = [first] + [b for b in BACKENDS
+                           if b != first and self.available(b)]
+        n = len(s) if n_real is None else int(n_real)
+        last_err: Optional[Exception] = None
+        for i, b in enumerate(chain):
+            if not self.available(b):
+                continue
+            try:
+                t0 = time.perf_counter()
+                ans = self._run(b, s, t, mr_id, n)
+                self.recorders[b].record(time.perf_counter() - t0, n)
+                if i > 0:
+                    self.fallbacks += 1
+                return np.asarray(ans[:n], dtype=bool), b
+            except Exception as e:  # noqa: BLE001 — fall through the chain
+                last_err = e
+        raise ExecutorError(
+            f"all backends failed for batch of {n} queries") from last_err
+
+    def _run(self, backend: str, s, t, mr_id, n: int) -> np.ndarray:
+        # Padding only exists to keep a static jit shape for the device
+        # backends; the per-query loop backends skip the padded slots.
+        if backend == "pallas":
+            return self.device_index.query_batch(s, t, mr_id,
+                                                 use_pallas=True)
+        if backend == "sorted":
+            return self.device_index.query_batch(s, t, mr_id,
+                                                 method="sorted")
+        if backend == "numpy":
+            return self.frozen.query_batch(s[:n], t[:n], mr_id[:n])
+        if backend == "python":
+            out = np.zeros(n, dtype=bool)
+            for q in range(n):
+                out[q] = self.index.query(int(s[q]), int(t[q]),
+                                          self.id_to_mr[int(mr_id[q])])
+            return out
+        raise ExecutorError(f"unknown backend {backend!r}")
+
+    # ------------------------------------------------------------------ #
+    def stats(self) -> Dict[str, Dict[str, float]]:
+        """Summaries for every backend that actually served a batch."""
+        return {b: r.summary() for b, r in self.recorders.items()
+                if r.batches}

@@ -1,0 +1,49 @@
+"""Latency / throughput accounting for the serving path."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+
+class LatencyRecorder:
+    """Per-backend wall-clock samples with percentile summaries.
+
+    One sample = one executed batch; ``queries`` tracks the real (unpadded)
+    queries answered so throughput reflects useful work.
+    """
+
+    def __init__(self, name: str):
+        self.name = name
+        self.samples_s: List[float] = []
+        self.queries = 0
+        self.batches = 0
+
+    def record(self, seconds: float, n_queries: int) -> None:
+        self.samples_s.append(float(seconds))
+        self.queries += int(n_queries)
+        self.batches += 1
+
+    @property
+    def total_s(self) -> float:
+        return float(sum(self.samples_s))
+
+    def percentile(self, p: float) -> float:
+        """p in [0, 100]; seconds per batch. 0.0 when empty."""
+        if not self.samples_s:
+            return 0.0
+        return float(np.percentile(np.asarray(self.samples_s), p))
+
+    @property
+    def qps(self) -> float:
+        return self.queries / self.total_s if self.total_s > 0 else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        return dict(
+            batches=self.batches,
+            queries=self.queries,
+            total_s=self.total_s,
+            p50_ms=self.percentile(50) * 1e3,
+            p99_ms=self.percentile(99) * 1e3,
+            qps=self.qps,
+        )

@@ -1,0 +1,134 @@
+"""Micro-batching scheduler for RLC queries.
+
+Incoming ``(s, t, mr)`` requests accumulate into fixed-size batches so the
+batched engines (XLA sorted-key / Pallas dense) amortize dispatch and keep
+a single jit specialization per batch shape — the same slot pattern as the
+LM serving engine (:mod:`repro.serve.engine`), transplanted to queries.
+
+Buckets are keyed by MR length: all requests in a batch share ``|MR|``, so
+Zipf-heavy short constraints don't ride in batches padded for long ones,
+and per-bucket arrival rates stay observable. A batch flushes when it is
+full (``batch_size`` requests) or when its oldest request has waited
+``max_wait_s`` (deadline flush, checked by :meth:`MicroBatcher.poll`).
+Underfull deadline flushes are padded by repeating the first request up to
+``batch_size`` — always a valid query, and keeping one static batch shape
+avoids jit re-tracing (padding answers are sliced off).
+
+The scheduler is clock-driven and synchronous: callers hand it a ``now``
+timestamp (or let it read the injected clock), and flushed batches come
+back for the caller to execute. That keeps it deterministic under test and
+leaves async admission to a later PR (see ROADMAP).
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Request:
+    """One admitted query, already canonicalized to an indexed MR."""
+
+    req_id: int
+    s: int
+    t: int
+    mr_id: int
+    mr_len: int
+    enqueued_at: float = 0.0
+
+
+@dataclass
+class Batch:
+    """A padded, launch-ready batch of same-``|MR|`` requests."""
+
+    requests: List[Request]     # the real requests, in admission order
+    s: np.ndarray               # (batch_size,) int32, padded
+    t: np.ndarray
+    mr_id: np.ndarray
+    mr_len: int
+    reason: str                 # "full" | "deadline" | "drain"
+
+    @property
+    def n_real(self) -> int:
+        return len(self.requests)
+
+    @property
+    def n_padding(self) -> int:
+        return len(self.s) - len(self.requests)
+
+
+class MicroBatcher:
+    def __init__(self, batch_size: int, max_wait_s: float = 0.002,
+                 clock: Callable[[], float] = time.monotonic):
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        if max_wait_s < 0:
+            raise ValueError(f"max_wait_s must be >= 0, got {max_wait_s}")
+        self.batch_size = batch_size
+        self.max_wait_s = max_wait_s
+        self.clock = clock
+        self._buckets: Dict[int, List[Request]] = {}
+        self._ids = itertools.count()
+        self.batches_full = 0
+        self.batches_deadline = 0
+        self.batches_drain = 0
+
+    # ------------------------------------------------------------------ #
+    def submit(self, s: int, t: int, mr_id: int, mr_len: int,
+               now: Optional[float] = None) -> Tuple[Request, List[Batch]]:
+        """Admit one request; return it plus any batches now ready (the
+        request's own bucket on fill, any bucket past its deadline)."""
+        now = self.clock() if now is None else now
+        req = Request(next(self._ids), int(s), int(t), int(mr_id),
+                      int(mr_len), now)
+        bucket = self._buckets.setdefault(mr_len, [])
+        bucket.append(req)
+        out: List[Batch] = []
+        if len(bucket) >= self.batch_size:
+            out.append(self._flush_bucket(mr_len, "full"))
+        # An admission is also a natural poll point for other buckets.
+        out.extend(self.poll(now))
+        return req, out
+
+    def poll(self, now: Optional[float] = None) -> List[Batch]:
+        """Flush every bucket whose oldest request has hit the deadline."""
+        now = self.clock() if now is None else now
+        out: List[Batch] = []
+        for mr_len in list(self._buckets):
+            bucket = self._buckets[mr_len]
+            if bucket and now - bucket[0].enqueued_at >= self.max_wait_s:
+                out.append(self._flush_bucket(mr_len, "deadline"))
+        return out
+
+    def drain(self) -> List[Batch]:
+        """Flush everything regardless of fill or age (end of a sync call)."""
+        out = [self._flush_bucket(m, "drain") for m in list(self._buckets)
+               if self._buckets[m]]
+        return out
+
+    def pending(self) -> int:
+        return sum(len(b) for b in self._buckets.values())
+
+    # ------------------------------------------------------------------ #
+    def _flush_bucket(self, mr_len: int, reason: str) -> Batch:
+        bucket = self._buckets[mr_len]
+        reqs, rest = bucket[:self.batch_size], bucket[self.batch_size:]
+        self._buckets[mr_len] = rest
+        if reason == "full":
+            self.batches_full += 1
+        elif reason == "deadline":
+            self.batches_deadline += 1
+        else:
+            self.batches_drain += 1
+        B = self.batch_size
+        s = np.empty(B, np.int32)
+        t = np.empty(B, np.int32)
+        mr = np.empty(B, np.int32)
+        for i in range(B):
+            r = reqs[min(i, len(reqs) - 1)]  # pad by repeating the first/last
+            s[i], t[i], mr[i] = r.s, r.t, r.mr_id
+        return Batch(reqs, s, t, mr, mr_len, reason)

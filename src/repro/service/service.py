@@ -1,0 +1,165 @@
+"""The :class:`RLCService` facade: build -> freeze -> device -> serve.
+
+Wires the whole serving path together::
+
+    g = erdos_renyi(500, 4.0, 4)
+    svc = RLCService.build(g, ServiceConfig(k=2, batch_size=16))
+    svc.query(3, 17, "(0 1)+")                  # single, through the cache
+    svc.query_batch([(s, t, "(a b)+"), ...])    # micro-batched
+
+Admission: each query's constraint is parsed/validated/canonicalized to a
+minimum repeat (:mod:`repro.service.expr`), checked against the result
+cache, and — on miss — handed to the micro-batcher. Flushed batches run on
+the executor (device backend with python fallback); answers backfill the
+cache. ``query_batch`` is synchronous: it drains the scheduler before
+returning, so every admitted query is answered in admission order.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core.graph import LabeledGraph
+from repro.core.index_builder import build_rlc_index
+from repro.core.minimum_repeat import LabelSeq, mr_id_space
+from repro.core.rlc_index import RLCIndex
+
+from .cache import ResultCache
+from .executor import BatchExecutor
+from .expr import PathExpression, canonicalize, parse_expression
+from .scheduler import Batch, MicroBatcher
+
+Constraint = Union[str, Sequence[int], PathExpression]
+Query = Tuple[int, int, Constraint]
+
+
+@dataclass
+class ServiceConfig:
+    k: int = 2
+    batch_size: int = 32
+    max_wait_ms: float = 2.0
+    cache_capacity: int = 4096
+    backend: str = "auto"           # "auto" | "pallas" | "sorted" | "numpy" | "python"
+    use_device: bool = True         # build the padded DeviceIndex layout
+    label_names: Optional[Dict[str, int]] = None  # e.g. {"knows": 0, ...}
+
+
+class RLCService:
+    def __init__(self, graph: LabeledGraph, index: RLCIndex,
+                 config: ServiceConfig):
+        self.graph = graph
+        self.index = index
+        self.config = config
+        self.mr_ids = mr_id_space(graph.num_labels, config.k)
+        self._id_to_mr: List[LabelSeq] = [
+            mr for mr, _ in sorted(self.mr_ids.items(), key=lambda kv: kv[1])]
+        self.frozen = index.freeze(self.mr_ids)
+        self.device_index = None
+        if config.use_device:
+            try:
+                from repro.core.device_index import DeviceIndex
+                self.device_index = DeviceIndex.from_frozen(
+                    self.frozen, self.mr_ids)
+            except Exception:   # no jax / no device: CPU-only degraded mode
+                self.device_index = None
+        self.executor = BatchExecutor(
+            index, self.frozen, self.device_index, self._id_to_mr,
+            backend=config.backend)
+        self.cache = ResultCache(config.cache_capacity)
+        self.batcher = MicroBatcher(config.batch_size,
+                                    config.max_wait_ms * 1e-3)
+        self.queries_served = 0
+
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def build(cls, graph: LabeledGraph,
+              config: Optional[ServiceConfig] = None,
+              index: Optional[RLCIndex] = None) -> "RLCService":
+        """Build (or adopt) the RLC index for ``graph`` and start serving."""
+        config = config or ServiceConfig()
+        if index is None:
+            index = build_rlc_index(graph, config.k)
+        elif index.k != config.k:
+            raise ValueError(
+                f"index built with k={index.k} but config.k={config.k}")
+        return cls(graph, index, config)
+
+    # -- admission ------------------------------------------------------ #
+    def parse(self, constraint: Constraint) -> PathExpression:
+        if isinstance(constraint, PathExpression):
+            return constraint
+        if isinstance(constraint, str):
+            return parse_expression(
+                constraint, num_labels=self.graph.num_labels,
+                k=self.config.k, label_names=self.config.label_names)
+        return canonicalize(constraint, num_labels=self.graph.num_labels,
+                            k=self.config.k)
+
+    def _admit(self, s: int, t: int, constraint: Constraint
+               ) -> Tuple[int, int, int, int]:
+        n = self.graph.num_vertices
+        s, t = int(s), int(t)
+        if not (0 <= s < n and 0 <= t < n):
+            raise ValueError(
+                f"vertex ids ({s}, {t}) out of range [0, {n})")
+        expr = self.parse(constraint)
+        return s, t, self.mr_ids[expr.mr], len(expr.mr)
+
+    # -- serving -------------------------------------------------------- #
+    def query(self, s: int, t: int, constraint: Constraint) -> bool:
+        """Synchronous single query (cache -> batch-of-one on miss)."""
+        return self.query_batch([(s, t, constraint)])[0]
+
+    def query_batch(self, queries: Sequence[Query],
+                    now: Optional[float] = None) -> List[bool]:
+        """Answer ``queries`` in order through cache + scheduler + executor.
+
+        ``now``: optional admission timestamp (for replaying a timed
+        arrival trace); defaults to the scheduler's clock per admission.
+        """
+        answers: List[Optional[bool]] = [None] * len(queries)
+        slot: Dict[int, int] = {}   # scheduler req_id -> output position
+        for i, (s, t, constraint) in enumerate(queries):
+            s, t, mr_id, mr_len = self._admit(s, t, constraint)
+            hit = self.cache.get((s, t, mr_id))
+            if hit is not None:
+                answers[i] = hit
+                continue
+            req, ready = self.batcher.submit(s, t, mr_id, mr_len, now)
+            slot[req.req_id] = i
+            for batch in ready:
+                self._execute(batch, answers, slot)
+        for batch in self.batcher.drain():
+            self._execute(batch, answers, slot)
+        self.queries_served += len(queries)
+        return [bool(a) for a in answers]
+
+    def _execute(self, batch: Batch, answers: List[Optional[bool]],
+                 slot: Dict[int, int]) -> None:
+        ans, _backend = self.executor.execute(
+            batch.s, batch.t, batch.mr_id, batch.n_real)
+        for req, val in zip(batch.requests, ans):
+            val = bool(val)
+            self.cache.put((req.s, req.t, req.mr_id), val)
+            answers[slot[req.req_id]] = val
+
+    # -- observability --------------------------------------------------- #
+    def stats(self) -> dict:
+        return dict(
+            queries_served=self.queries_served,
+            cache=self.cache.stats.as_dict(),
+            backends=self.executor.stats(),
+            fallbacks=self.executor.fallbacks,
+            scheduler=dict(
+                batches_full=self.batcher.batches_full,
+                batches_deadline=self.batcher.batches_deadline,
+                batches_drain=self.batcher.batches_drain,
+                pending=self.batcher.pending()),
+            index=dict(
+                entries=self.index.num_entries(),
+                size_bytes=self.index.size_bytes(),
+                num_mrs=len(self.mr_ids),
+                device=self.device_index is not None,
+                row_len=(self.device_index.row_len
+                         if self.device_index else None)),
+        )

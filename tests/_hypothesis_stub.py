@@ -1,0 +1,75 @@
+"""Deterministic stand-in for the tiny slice of the `hypothesis` API this
+suite uses (``given``, ``settings``, ``strategies.integers/lists/.map``).
+
+The container image does not ship hypothesis and nothing may be installed,
+so ``conftest.py`` drops this module into ``sys.modules['hypothesis']``
+when the real library is missing. Each property then runs against a fixed
+number of samples from a per-test seeded RNG — weaker than real hypothesis
+(no shrinking, no coverage-guided generation) but deterministic and enough
+to keep the property tests meaningful.
+"""
+from __future__ import annotations
+
+import functools
+import random
+import zlib
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example(self, rng: random.Random):
+        return self._sample(rng)
+
+    def map(self, fn) -> "_Strategy":
+        return _Strategy(lambda rng: fn(self._sample(rng)))
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _lists(elements: _Strategy, min_size: int = 0,
+           max_size: int = 10) -> _Strategy:
+    def sample(rng: random.Random):
+        n = rng.randint(min_size, max_size)
+        return [elements.example(rng) for _ in range(n)]
+    return _Strategy(sample)
+
+
+class _StrategiesNamespace:
+    integers = staticmethod(_integers)
+    lists = staticmethod(_lists)
+
+
+strategies = _StrategiesNamespace()
+
+_DEFAULT_EXAMPLES = 25
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        # NB: no functools.wraps — copying fn's signature would make pytest
+        # treat the strategy parameters as fixtures. The wrapper must look
+        # zero-argument; all inputs come from the strategies.
+        def wrapper():
+            n = getattr(wrapper, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples", _DEFAULT_EXAMPLES))
+            # seeded per test name (crc32: stable across PYTHONHASHSEED)
+            rng = random.Random(zlib.crc32(fn.__name__.encode()))
+            for _ in range(n):
+                vals = [s.example(rng) for s in strats]
+                fn(*vals)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.is_hypothesis_stub = True
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco

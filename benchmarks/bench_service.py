@@ -23,14 +23,9 @@ from repro.core.queries import biased_true_queries
 from repro.graphgen import erdos_renyi
 from repro.service import RLCService, ServiceConfig
 
-from .common import Report
+from .common import Report, run_query_stream, zipf_weights
 
 ART = os.path.join(os.path.dirname(__file__), "artifacts")
-
-
-def _zipf_weights(n: int, exponent: float = 1.0) -> np.ndarray:
-    w = np.arange(1, n + 1, dtype=np.float64) ** (-exponent)
-    return w / w.sum()
 
 
 def _warmup(svc: RLCService, backend: str) -> None:
@@ -43,19 +38,6 @@ def _warmup(svc: RLCService, backend: str) -> None:
     z = np.zeros(B, np.int32)
     svc.executor.execute(z, z, z, backend=backend)
     svc.executor.recorders = {b: LatencyRecorder(b) for b in BACKENDS}
-
-
-def _run_stream(svc: RLCService, stream, chunk: int):
-    """Feed the stream through the service in arrival chunks; returns
-    per-query latencies (seconds)."""
-    lat = []
-    for i in range(0, len(stream), chunk):
-        batch = stream[i:i + chunk]
-        t0 = time.perf_counter()
-        svc.query_batch(batch)
-        dt = time.perf_counter() - t0
-        lat.extend([dt / len(batch)] * len(batch))
-    return np.asarray(lat)
 
 
 def run(quick: bool = True, k: int = 2) -> Report:
@@ -77,7 +59,7 @@ def run(quick: bool = True, k: int = 2) -> Report:
     pool = [(s, t, L) for s, t, L in qs.true_queries + qs.false_queries]
     rng = np.random.default_rng(17)
     rng.shuffle(pool)
-    weights = _zipf_weights(len(pool))
+    weights = zipf_weights(len(pool))
     stream = [pool[i] for i in
               rng.choice(len(pool), size=n_requests, p=weights)]
 
@@ -88,12 +70,13 @@ def run(quick: bool = True, k: int = 2) -> Report:
                              cache_capacity=1024, backend=backend),
             index=base.index)
         _warmup(svc, backend)
-        lat = _run_stream(svc, stream, chunk=64)
+        lat = run_query_stream(svc, stream, chunk=64)
         st = svc.stats()
         # label the row with the backend that actually answered (fallback
         # would otherwise silently misattribute the numbers)
-        served = max(st["backends"], key=lambda b: st["backends"][b]["batches"])
-        b = st["backends"][served]
+        ex = st["executor"]["backends"]
+        served = max(ex, key=lambda b: ex[b]["batches"])
+        b = ex[served]
         row = dict(
             stage="serve", backend=served, requested_backend=backend,
             requests=len(stream),
@@ -117,7 +100,7 @@ def run(quick: bool = True, k: int = 2) -> Report:
             g, ServiceConfig(k=k, batch_size=32, cache_capacity=cap,
                              backend="sorted"), index=base.index)
         _warmup(svc, "sorted")
-        lat = _run_stream(svc, stream, chunk=64)
+        lat = run_query_stream(svc, stream, chunk=64)
         st = svc.stats()
         rep.add(stage="cache_ablation", cache_capacity=cap,
                 cache_hit_rate=round(st["cache"]["hit_rate"], 4),

@@ -1,0 +1,104 @@
+"""Sharded-serving benchmark: throughput and latency vs shard count.
+
+Same Zipf request workload as :mod:`benchmarks.bench_service`, served by
+:class:`repro.service.sharded.ShardedRLCService` at shard counts 1/2/4/8
+(x replicas where requested). Reported per shard count: per-query p50/p99
+latency, throughput, cache hit-rate, local-route ratio, shipped digest
+bytes, and the shard plan's entry balance — the numbers that show what
+two-sided routing costs (cross-shard hops) and buys (per-host index
+slices shrink ~1/S while answers stay bit-identical).
+
+One hot-swap row measures the rolling-rebuild pause at the largest shard
+count. Writes the orchestrator CSV plus a JSON artifact
+(``benchmarks/artifacts/sharded.json``) alongside ``service.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.queries import biased_true_queries
+from repro.graphgen import erdos_renyi
+from repro.service import RLCService, ServiceConfig
+from repro.service.sharded import ShardedRLCService, ShardedServiceConfig
+
+from .common import Report, run_query_stream, zipf_weights
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def run(quick: bool = True, k: int = 2) -> Report:
+    rep = Report("sharded")
+    n = 400 if quick else 4000
+    n_pool = 240 if quick else 1200
+    n_requests = 3000 if quick else 30000
+    shard_counts = (1, 2, 4, 8)
+    num_replicas = 2
+    g = erdos_renyi(n, 3.5, 4, seed=31)
+
+    t0 = time.perf_counter()
+    base = RLCService.build(g, ServiceConfig(k=k))
+    rep.add(stage="build", V=n, E=g.num_edges, k=k,
+            entries=base.index.num_entries(),
+            seconds=round(time.perf_counter() - t0, 3))
+
+    qs = biased_true_queries(g, k, n=n_pool // 2, seed=5)
+    pool = qs.true_queries + qs.false_queries
+    rng = np.random.default_rng(17)
+    rng.shuffle(pool)
+    stream = [pool[i] for i in rng.choice(
+        len(pool), size=n_requests, p=zipf_weights(len(pool)))]
+
+    results = {}
+    for S in shard_counts:
+        t0 = time.perf_counter()
+        svc = ShardedRLCService.build(
+            g, ShardedServiceConfig(
+                k=k, batch_size=32, max_wait_ms=2.0, cache_capacity=1024,
+                num_shards=S, num_replicas=num_replicas),
+            index=base.index)
+        shard_build_s = time.perf_counter() - t0
+        lat = run_query_stream(svc, stream, chunk=64)
+        st = svc.stats()
+        row = dict(
+            stage="serve", shards=S, replicas=num_replicas,
+            requests=len(stream),
+            q_p50_us=round(float(np.percentile(lat, 50)) * 1e6, 1),
+            q_p99_us=round(float(np.percentile(lat, 99)) * 1e6, 1),
+            qps=round(len(stream) / lat.sum(), 1),
+            cache_hit_rate=round(st["cache"]["hit_rate"], 4),
+            local_ratio=st["router"]["local_ratio"],
+            digest_kb=round(st["executor"]["digest_bytes"] / 1024, 1),
+            plan_balance=st["index"]["plan"]["balance"],
+            max_shard_bytes=max(sh["size_bytes"] for sh in st["shards"]),
+            shard_build_s=round(shard_build_s, 3),
+        )
+        rep.add(**row)
+        results[f"shards_{S}"] = dict(row, stats=st)
+
+    # hot-swap pause at the largest shard count: time the rolling rebuild
+    svc = ShardedRLCService.build(
+        g, ShardedServiceConfig(k=k, batch_size=32, cache_capacity=1024,
+                                num_shards=shard_counts[-1],
+                                num_replicas=num_replicas),
+        index=base.index)
+    run_query_stream(svc, stream[:500], chunk=64)     # warm
+    t0 = time.perf_counter()
+    svc.hot_swap()                               # re-freeze + swap all shards
+    swap_s = time.perf_counter() - t0
+    lat = run_query_stream(svc, stream[:1000], chunk=64)
+    rep.add(stage="hot_swap", shards=shard_counts[-1],
+            replicas=num_replicas, swap_s=round(swap_s, 3),
+            post_swap_p50_us=round(float(np.percentile(lat, 50)) * 1e6, 1))
+    results["hot_swap"] = dict(shards=shard_counts[-1], swap_s=swap_s)
+
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "sharded.json"), "w") as f:
+        json.dump(dict(graph=g.summary(), k=k, requests=n_requests,
+                       zipf_exponent=1.0, replicas=num_replicas,
+                       shard_counts=list(shard_counts), results=results),
+                  f, indent=2, default=str)
+    return rep

@@ -19,6 +19,27 @@ import numpy as np
 from repro.graphgen import barabasi_albert, erdos_renyi
 
 
+def zipf_weights(n: int, exponent: float = 1.0) -> np.ndarray:
+    """Zipfian popularity over ``n`` items (the serving benches' workload
+    shape — one definition so service/sharded numbers stay comparable)."""
+    w = np.arange(1, n + 1, dtype=np.float64) ** (-exponent)
+    return w / w.sum()
+
+
+def run_query_stream(svc, stream, chunk: int) -> np.ndarray:
+    """Feed a query stream through a service in arrival chunks; returns
+    per-query latencies (seconds). ``svc`` is any object with the
+    ``query_batch`` serving surface (RLCService or ShardedRLCService)."""
+    lat = []
+    for i in range(0, len(stream), chunk):
+        batch = stream[i:i + chunk]
+        t0 = time.perf_counter()
+        svc.query_batch(batch)
+        dt = time.perf_counter() - t0
+        lat.extend([dt / len(batch)] * len(batch))
+    return np.asarray(lat)
+
+
 def timeit(fn: Callable, repeats: int = 1) -> float:
     """Median wall seconds over ``repeats`` calls."""
     ts = []

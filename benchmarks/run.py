@@ -25,7 +25,7 @@ def main(argv=None):
 
     from . import (bench_device, bench_graph_chars, bench_indexing,
                    bench_k, bench_query, bench_scalability, bench_service,
-                   bench_systems)
+                   bench_sharded, bench_systems)
 
     suites = {
         "indexing": lambda: bench_indexing.run(quick),
@@ -37,6 +37,7 @@ def main(argv=None):
         "systems": lambda: bench_systems.run(quick),
         "device": lambda: bench_device.run(quick),
         "service": lambda: bench_service.run(quick),
+        "sharded": lambda: bench_sharded.run(quick),
     }
     failures = []
     for name, fn in suites.items():

@@ -77,11 +77,11 @@ def main():
           f"{sch['batches_deadline']} deadline, "
           f"{sch['batches_drain']} drain flushes")
     print("backends:")
-    for name, b in stats["backends"].items():
+    for name, b in stats["executor"]["backends"].items():
         print(f"  {name:7s} {b['batches']:4d} batches "
               f"{b['queries']:5d} queries  p50 {b['p50_ms']:7.3f} ms  "
               f"p99 {b['p99_ms']:7.3f} ms  {b['qps']:9.0f} q/s")
-    print(f"  fallbacks: {stats['fallbacks']}")
+    print(f"  fallbacks: {stats['executor']['fallbacks']}")
 
 
 if __name__ == "__main__":

@@ -33,19 +33,27 @@ class DeviceIndex:
       * sorted — rows re-encoded as ascending ``hub * C + mr`` keys; the
         join is a vectorized ``searchsorted`` intersection, moving (Q, E)
         instead of (Q, E, E) through HBM — the XLA-lowered serving path.
+
+    With ``row_lo > 0`` the arrays hold only the vertex-row window
+    ``[row_lo, row_lo + rows)`` (a shard's slice): query/hub *ids* stay
+    global, only row storage is windowed — a shard's device memory then
+    really is ~1/S of the whole index. Callers must only query vertices
+    inside the window (the sharded router's contract).
     """
 
     num_vertices: int
     k: int
     row_len: int
-    out_hub: jax.Array  # (n, E) int32, PAD-filled
-    out_mr: jax.Array   # (n, E) int32
+    out_hub: jax.Array  # (rows, E) int32, PAD-filled
+    out_mr: jax.Array   # (rows, E) int32
     in_hub: jax.Array
     in_mr: jax.Array
     mr_ids: Dict[LabelSeq, int]
     num_mrs: int = 0
-    out_key: Optional[jax.Array] = None  # (n, E) int32 sorted asc
+    out_key: Optional[jax.Array] = None  # (rows, E) int32 sorted asc
     in_key: Optional[jax.Array] = None
+    row_lo: int = 0     # first vertex id stored; ids below/above are
+                        # outside this window (other shards)
 
     @staticmethod
     def from_index(idx: RLCIndex, num_labels: int,
@@ -59,21 +67,31 @@ class DeviceIndex:
     @staticmethod
     def from_frozen(frozen: FrozenRLCIndex, mr_ids: Dict[LabelSeq, int],
                     row_len: Optional[int] = None,
-                    pad_to_multiple: int = 8) -> "DeviceIndex":
+                    pad_to_multiple: int = 8,
+                    rows: Optional[Tuple[int, int]] = None) -> "DeviceIndex":
         """Device transfer of an already-frozen index (the service path
-        freezes once and reuses the CSR layout for the numpy backend)."""
+        freezes once and reuses the CSR layout for the numpy backend).
+
+        ``rows=(lo, hi)`` packs only that vertex-row window — pair it with
+        :meth:`FrozenRLCIndex.slice_rows` so a shard's device arrays cover
+        just the rows it owns instead of full height.
+        """
         E = row_len or max(1, frozen.max_row)
         E = ((E + pad_to_multiple - 1) // pad_to_multiple) * pad_to_multiple
-        n = frozen.num_vertices
+        lo, hi = (0, frozen.num_vertices) if rows is None else rows
+        if not (0 <= lo <= hi <= frozen.num_vertices):
+            raise ValueError(
+                f"rows [{lo}, {hi}) out of range "
+                f"[0, {frozen.num_vertices}]")
 
         def pack(indptr, hub, mr):
-            H = np.full((n, E), PAD, np.int32)
-            M = np.full((n, E), PAD, np.int32)
-            for v in range(n):
+            H = np.full((hi - lo, E), PAD, np.int32)
+            M = np.full((hi - lo, E), PAD, np.int32)
+            for v in range(lo, hi):
                 a, b = indptr[v], indptr[v + 1]
                 ln = min(b - a, E)
-                H[v, :ln] = hub[a:a + ln]
-                M[v, :ln] = mr[a:a + ln]
+                H[v - lo, :ln] = hub[a:a + ln]
+                M[v - lo, :ln] = mr[a:a + ln]
             return jnp.asarray(H), jnp.asarray(M)
 
         oh, om = pack(frozen.out_indptr, frozen.out_hub, frozen.out_mr)
@@ -87,8 +105,8 @@ class DeviceIndex:
                            h.astype(np.int64) * C + m).astype(np.int32)
             return jnp.asarray(np.sort(key, axis=1))
 
-        return DeviceIndex(n, frozen.k, E, oh, om, ih, im, mr_ids, C,
-                           keys(oh, om), keys(ih, im))
+        return DeviceIndex(frozen.num_vertices, frozen.k, E, oh, om, ih, im,
+                           mr_ids, C, keys(oh, om), keys(ih, im), lo)
 
     # ---------------------------------------------------------------- #
     def query_batch(self, s: np.ndarray, t: np.ndarray, mr: np.ndarray,
@@ -101,13 +119,15 @@ class DeviceIndex:
             from repro.kernels import ops
             out = ops.mergejoin_query(
                 self.out_hub, self.out_mr, self.in_hub, self.in_mr,
-                s, t, mr)
+                s, t, mr, row_base_out=self.row_lo, row_base_in=self.row_lo)
         elif method == "sorted":
-            out = _query_batch_sorted(self.out_key, self.in_key, s, t, mr,
-                                      self.num_mrs)
+            out = _query_batch_sorted_rows(
+                self.out_key, self.in_key, s - self.row_lo,
+                t - self.row_lo, s, t, mr, self.num_mrs)
         else:
-            out = _query_batch_ref(self.out_hub, self.out_mr, self.in_hub,
-                                   self.in_mr, s, t, mr)
+            out = _query_batch_rows(self.out_hub, self.out_mr, self.in_hub,
+                                    self.in_mr, s - self.row_lo,
+                                    t - self.row_lo, s, t, mr)
         return np.asarray(out)
 
     def query(self, s: int, t: int, L: Sequence[int]) -> bool:
@@ -117,38 +137,69 @@ class DeviceIndex:
         return bool(self.query_batch(np.array([s]), np.array([t]),
                                      np.array([c]))[0])
 
+    # -- shard scatter/gather helpers -------------------------------------- #
+    def gather_out_rows(self, s: np.ndarray) -> Tuple[jax.Array, jax.Array]:
+        """Padded ``(Q, E)`` out-row digests for a batch of source vertices
+        — what a shard ships to the in-side owner for a cross-shard join
+        (:func:`join_rows`). ``s`` is in global vertex ids."""
+        s = jnp.asarray(s, jnp.int32) - self.row_lo
+        return self.out_hub[s], self.out_mr[s]
+
+    def gather_in_rows(self, t: np.ndarray) -> Tuple[jax.Array, jax.Array]:
+        t = jnp.asarray(t, jnp.int32) - self.row_lo
+        return self.in_hub[t], self.in_mr[t]
+
 
 @jax.jit
-def _query_batch_ref(out_hub, out_mr, in_hub, in_mr, s, t, mr):
-    """Reference batched Algorithm 1 (also the Pallas kernel oracle).
+def join_rows(oh, om, ih, im, s, t, mr):
+    """Batched Algorithm 1 on pre-gathered rows.
 
-    For each query q: gather rows out[s_q], in[t_q]; Case 2 via direct
-    compares, Case 1 via an (E x E) broadcast join (rows are aid-sorted;
-    the O(E^2) compare is the dense analog of the merge join and is
-    MXU/VPU-friendly at serving batch sizes).
+    ``oh/om`` are (Q, Eo) out-rows of each query's ``s``; ``ih/im`` are
+    (Q, Ei) in-rows of each query's ``t`` (Eo and Ei may differ — e.g. two
+    shards with different row paddings). Case 2 via direct compares, Case 1
+    via an (Eo x Ei) broadcast join (rows are aid-sorted; the dense compare
+    is the merge join's VPU-friendly analog). Separated from the row gather
+    so the sharded fan-out path can join a shipped digest against local
+    in-rows without materializing one global index.
     """
-    oh = out_hub[s]          # (Q, E)
-    om = out_mr[s]
-    ih = in_hub[t]
-    im = in_mr[t]
     q_mr = mr[:, None]
     case2 = jnp.any((oh == t[:, None]) & (om == q_mr), axis=1) | \
         jnp.any((ih == s[:, None]) & (im == q_mr), axis=1)
-    o_ok = (om == q_mr) & (oh != PAD)            # (Q, E)
-    i_ok = (im == q_mr) & (ih != PAD)
+    o_ok = (om == q_mr) & (oh != PAD)            # (Q, Eo)
+    i_ok = (im == q_mr) & (ih != PAD)            # (Q, Ei)
     join = (oh[:, :, None] == ih[:, None, :]) & \
-        o_ok[:, :, None] & i_ok[:, None, :]      # (Q, E, E)
+        o_ok[:, :, None] & i_ok[:, None, :]      # (Q, Eo, Ei)
     case1 = jnp.any(join, axis=(1, 2))
     return case2 | case1
 
 
 @jax.jit
-def _query_batch_sorted(out_key, in_key, s, t, mr, num_mrs):
+def _query_batch_rows(out_hub, out_mr, in_hub, in_mr, s_row, t_row,
+                      s, t, mr):
+    """Row-windowed batched Algorithm 1: gather by *storage* row index
+    (``s_row = s - row_lo``), compare by global vertex id — the shard
+    layouts store a window of rows but keep the global id space."""
+    return join_rows(out_hub[s_row], out_mr[s_row],
+                     in_hub[t_row], in_mr[t_row], s, t, mr)
+
+
+@jax.jit
+def _query_batch_ref(out_hub, out_mr, in_hub, in_mr, s, t, mr):
+    """Reference batched Algorithm 1 (also the Pallas kernel oracle):
+    gather rows out[s_q], in[t_q], then :func:`join_rows`. Full-height
+    (row_lo = 0) layout form, kept for the distributed/dryrun harnesses."""
+    return join_rows(out_hub[s], out_mr[s], in_hub[t], in_mr[t], s, t, mr)
+
+
+@jax.jit
+def _query_batch_sorted_rows(out_key, in_key, s_row, t_row, s, t, mr,
+                             num_mrs):
     """Sorted-key intersection join: O(E log E) per query, (Q, E) HBM
     traffic (§Perf iteration 1 on rlc-query-1m). Key = hub * C + mr;
-    PAD rows sort to INT32_MAX and never match."""
-    ok = out_key[s]                       # (Q, E) ascending
-    ik = in_key[t]
+    PAD rows sort to INT32_MAX and never match. Rows are gathered by
+    storage index; key compares use global ids."""
+    ok = out_key[s_row]                   # (Q, E) ascending
+    ik = in_key[t_row]
     q_mr = mr[:, None]
     # Case 1: out keys with the queried mr present in the in row
     pos = jax.vmap(jnp.searchsorted)(ik, ok)        # (Q, E)
@@ -167,3 +218,11 @@ def _query_batch_sorted(out_key, in_key, s, t, mr, num_mrs):
     p3 = jnp.minimum(p3, ik.shape[1] - 1)
     c2b = jnp.take_along_axis(ik, p3, axis=1) == ks
     return case1 | jnp.any(c2a, axis=1) | jnp.any(c2b, axis=1)
+
+
+@jax.jit
+def _query_batch_sorted(out_key, in_key, s, t, mr, num_mrs):
+    """Full-height (row_lo = 0) form of the sorted-key join, kept for the
+    distributed/dryrun harnesses."""
+    return _query_batch_sorted_rows(out_key, in_key, s, t, s, t, mr,
+                                    num_mrs)

@@ -29,6 +29,48 @@ Entry = Tuple[int, LabelSeq]          # (hub vertex id, minimum repeat)
 EntryMap = Dict[int, Set[LabelSeq]]   # hub vertex id -> set of MRs
 
 
+def merge_join_rows(out_hub: np.ndarray, out_mr: np.ndarray,
+                    in_hub: np.ndarray, in_mr: np.ndarray,
+                    aid: np.ndarray, s: int, t: int, mr_id: int) -> bool:
+    """Algorithm 1 on two explicit aid-sorted entry rows.
+
+    ``out_hub/out_mr`` is L_out(s) and ``in_hub/in_mr`` is L_in(t), both in
+    the frozen ``(aid(hub), mr_id)`` order. Factored out of
+    :meth:`FrozenRLCIndex.query` so a shard that owns only ``t``'s in-side
+    can join against an out-row digest shipped from ``s``'s owning shard
+    (:mod:`repro.service.sharded`) — the rows don't have to come from the
+    same index object, only from the same ``aid`` space.
+    """
+    # Case 2: direct entries.
+    if (np.any((out_hub == t) & (out_mr == mr_id))
+            or np.any((in_hub == s) & (in_mr == mr_id))):
+        return True
+    # Case 1: merge join on aid(hub).
+    a, b = 0, 0
+    while a < len(out_hub) and b < len(in_hub):
+        ka, kb = aid[out_hub[a]], aid[in_hub[b]]
+        if ka < kb:
+            a += 1
+        elif kb < ka:
+            b += 1
+        else:
+            # same hub: scan the equal-aid runs for the queried MR.
+            hub_aid = ka
+            a2 = a
+            found_a = found_b = False
+            while a2 < len(out_hub) and aid[out_hub[a2]] == hub_aid:
+                found_a |= out_mr[a2] == mr_id
+                a2 += 1
+            b2 = b
+            while b2 < len(in_hub) and aid[in_hub[b2]] == hub_aid:
+                found_b |= in_mr[b2] == mr_id
+                b2 += 1
+            if found_a and found_b:
+                return True
+            a, b = a2, b2
+    return False
+
+
 @dataclass
 class RLCIndex:
     """A (possibly partially built) RLC index for a graph with ``n`` vertices.
@@ -174,40 +216,21 @@ class FrozenRLCIndex:
         return FrozenRLCIndex(idx.num_vertices, idx.k, idx.aid,
                               oi, oh, om, ii, ih, im)
 
+    def row_out(self, s: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Zero-copy ``(hub, mr)`` view of L_out(s), aid-sorted."""
+        o0, o1 = self.out_indptr[s], self.out_indptr[s + 1]
+        return self.out_hub[o0:o1], self.out_mr[o0:o1]
+
+    def row_in(self, t: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Zero-copy ``(hub, mr)`` view of L_in(t), aid-sorted."""
+        i0, i1 = self.in_indptr[t], self.in_indptr[t + 1]
+        return self.in_hub[i0:i1], self.in_mr[i0:i1]
+
     def query(self, s: int, t: int, mr_id: int) -> bool:
         """Algorithm 1 over the flat layout (true aid-ordered merge join)."""
-        o0, o1 = self.out_indptr[s], self.out_indptr[s + 1]
-        i0, i1 = self.in_indptr[t], self.in_indptr[t + 1]
-        oh, om = self.out_hub[o0:o1], self.out_mr[o0:o1]
-        ih, im = self.in_hub[i0:i1], self.in_mr[i0:i1]
-        # Case 2.
-        if np.any((oh == t) & (om == mr_id)) or np.any((ih == s) & (im == mr_id)):
-            return True
-        # Case 1: merge join on aid(hub).
-        a, b = 0, 0
-        aid = self.aid
-        while a < len(oh) and b < len(ih):
-            ka, kb = aid[oh[a]], aid[ih[b]]
-            if ka < kb:
-                a += 1
-            elif kb < ka:
-                b += 1
-            else:
-                # same hub: scan the equal-aid runs for the queried MR.
-                hub_aid = ka
-                a2 = a
-                found_a = found_b = False
-                while a2 < len(oh) and aid[oh[a2]] == hub_aid:
-                    found_a |= om[a2] == mr_id
-                    a2 += 1
-                b2 = b
-                while b2 < len(ih) and aid[ih[b2]] == hub_aid:
-                    found_b |= im[b2] == mr_id
-                    b2 += 1
-                if found_a and found_b:
-                    return True
-                a, b = a2, b2
-        return False
+        oh, om = self.row_out(s)
+        ih, im = self.row_in(t)
+        return merge_join_rows(oh, om, ih, im, self.aid, s, t, mr_id)
 
     def query_batch(self, s: Sequence[int], t: Sequence[int],
                     mr_id: Sequence[int]) -> np.ndarray:
@@ -228,3 +251,43 @@ class FrozenRLCIndex:
     def max_row(self) -> int:
         return int(max(np.max(np.diff(self.out_indptr), initial=0),
                        np.max(np.diff(self.in_indptr), initial=0)))
+
+    # -- shard slicing ----------------------------------------------------- #
+    def num_entries(self) -> int:
+        return len(self.out_hub) + len(self.in_hub)
+
+    def size_bytes(self) -> int:
+        """Paper-comparable size (matches :meth:`RLCIndex.size_bytes`)."""
+        return self.num_entries() * (4 + self.k)
+
+    def entry_weights(self) -> np.ndarray:
+        """Per-vertex entry counts (out + in) — the shard planner's balance
+        weight."""
+        return (np.diff(self.out_indptr) + np.diff(self.in_indptr))
+
+    def slice_rows(self, lo: int, hi: int) -> "FrozenRLCIndex":
+        """Zero-copy shard slice owning vertex rows ``[lo, hi)``.
+
+        The result keeps global vertex ids (``num_vertices``/``aid`` are
+        shared, not re-numbered): rows inside the range are numpy *views* of
+        this index's entry arrays (rows are contiguous because vertices
+        are), rows outside are empty. Queries with both endpoints in range
+        behave exactly like on the full index; a query whose ``s`` is
+        outside the range sees an empty out-row — that is the two-sided
+        routing contract: the caller must ship s's out-row digest in via
+        :func:`merge_join_rows` (or the device-side equivalent) instead.
+        """
+        if not (0 <= lo <= hi <= self.num_vertices):
+            raise ValueError(
+                f"slice [{lo}, {hi}) out of range "
+                f"[0, {self.num_vertices}]")
+
+        def cut(indptr, hub, mr):
+            base0, base1 = int(indptr[lo]), int(indptr[hi])
+            new = np.clip(indptr, base0, base1) - base0
+            return new, hub[base0:base1], mr[base0:base1]
+
+        oi, oh, om = cut(self.out_indptr, self.out_hub, self.out_mr)
+        ii, ih, im = cut(self.in_indptr, self.in_hub, self.in_mr)
+        return FrozenRLCIndex(self.num_vertices, self.k, self.aid,
+                              oi, oh, om, ii, ih, im)

@@ -40,18 +40,28 @@ def _mergejoin_kernel(s_ref, t_ref, mr_ref,       # scalar prefetch
 
 def query_batch(out_hub: jax.Array, out_mr: jax.Array, in_hub: jax.Array,
                 in_mr: jax.Array, s: jax.Array, t: jax.Array,
-                mr: jax.Array, *, interpret: bool = False) -> jax.Array:
-    """Returns (Q,) bool answers. E (row length) rides fully in VMEM."""
+                mr: jax.Array, *, interpret: bool = False,
+                row_base_out: int = 0, row_base_in: int = 0) -> jax.Array:
+    """Returns (Q,) bool answers. E (row length) rides fully in VMEM.
+
+    ``row_base_*`` offset the scalar-prefetch row lookups for
+    row-windowed shard layouts (storage row = vertex id - base); the
+    kernel body still compares the global ids in ``s``/``t``.
+    """
     n, E = out_hub.shape
     Q = s.shape[0]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(Q,),
         in_specs=[
-            pl.BlockSpec((1, E), lambda q, s_r, t_r, m_r: (s_r[q], 0)),
-            pl.BlockSpec((1, E), lambda q, s_r, t_r, m_r: (s_r[q], 0)),
-            pl.BlockSpec((1, E), lambda q, s_r, t_r, m_r: (t_r[q], 0)),
-            pl.BlockSpec((1, E), lambda q, s_r, t_r, m_r: (t_r[q], 0)),
+            pl.BlockSpec((1, E),
+                         lambda q, s_r, t_r, m_r: (s_r[q] - row_base_out, 0)),
+            pl.BlockSpec((1, E),
+                         lambda q, s_r, t_r, m_r: (s_r[q] - row_base_out, 0)),
+            pl.BlockSpec((1, E),
+                         lambda q, s_r, t_r, m_r: (t_r[q] - row_base_in, 0)),
+            pl.BlockSpec((1, E),
+                         lambda q, s_r, t_r, m_r: (t_r[q] - row_base_in, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1), lambda q, s_r, t_r, m_r: (q, 0)),
     )

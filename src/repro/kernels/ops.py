@@ -58,12 +58,16 @@ def closure_step(r: jax.Array, bm: int = 128, bk: int = 128, bn: int = 128,
     return out[:n, :n]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "row_base_out",
+                                             "row_base_in"))
 def mergejoin_query(out_hub, out_mr, in_hub, in_mr, s, t, mr,
-                    interpret: Optional[bool] = None) -> jax.Array:
+                    interpret: Optional[bool] = None,
+                    row_base_out: int = 0,
+                    row_base_in: int = 0) -> jax.Array:
     interpret = _ON_CPU if interpret is None else interpret
     return _mj.query_batch(out_hub, out_mr, in_hub, in_mr, s, t, mr,
-                           interpret=interpret)
+                           interpret=interpret, row_base_out=row_base_out,
+                           row_base_in=row_base_in)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

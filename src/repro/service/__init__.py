@@ -13,7 +13,10 @@ synchronous query service:
 * :mod:`repro.service.executor` — multi-backend batch executor (python /
   numpy / XLA-sorted / Pallas-dense) with automatic fallback;
 * :mod:`repro.service.service` — the :class:`RLCService` facade wiring
-  build -> freeze -> device transfer -> serve.
+  build -> freeze -> device transfer -> serve;
+* :mod:`repro.service.sharded` — sharded multi-host serving: shard
+  planner, two-sided router, replica sets with hot-swap, scatter/gather
+  fan-out behind the drop-in :class:`ShardedRLCService` facade.
 """
 from .cache import CacheStats, ResultCache
 from .executor import BACKENDS, BatchExecutor, ExecutorError
@@ -21,10 +24,11 @@ from .expr import ExpressionError, PathExpression, parse_expression
 from .metrics import LatencyRecorder
 from .scheduler import Batch, MicroBatcher, Request
 from .service import RLCService, ServiceConfig
+from .sharded import ShardedRLCService, ShardedServiceConfig
 
 __all__ = [
     "BACKENDS", "Batch", "BatchExecutor", "CacheStats", "ExecutorError",
     "ExpressionError", "LatencyRecorder", "MicroBatcher", "PathExpression",
     "RLCService", "Request", "ResultCache", "ServiceConfig",
-    "parse_expression",
+    "ShardedRLCService", "ShardedServiceConfig", "parse_expression",
 ]

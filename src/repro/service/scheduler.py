@@ -14,14 +14,27 @@ Underfull deadline flushes are padded by repeating the first request up to
 ``batch_size`` — always a valid query, and keeping one static batch shape
 avoids jit re-tracing (padding answers are sliced off).
 
-The scheduler is clock-driven and synchronous: callers hand it a ``now``
-timestamp (or let it read the injected clock), and flushed batches come
-back for the caller to execute. That keeps it deterministic under test and
-leaves async admission to a later PR (see ROADMAP).
+Duplicate in-flight keys are *coalesced*: submitting a ``(s, t, mr_id)``
+already queued returns the queued :class:`Request` instead of occupying a
+second batch slot — the caller fans the single answer out to every
+submitter (see ``RLCService.query_batch``'s slot map). Under a Zipf
+workload most duplicates are absorbed by the result cache, but duplicates
+*within one in-flight window* only exist here, before any answer is
+cached.
+
+The scheduler is clock-driven and synchronous by default: callers hand it
+a ``now`` timestamp (or let it read the injected clock), and flushed
+batches come back for the caller to execute. An optional background
+*deadline ticker* (:meth:`MicroBatcher.start_ticker`, off by default) adds
+the first step toward async admission: a daemon thread polls for deadline
+flushes so an underfull bucket drains even when no new admission ever
+arrives to piggyback the poll on. All mutating entry points take the
+internal lock, so ticker flushes and caller admissions interleave safely.
 """
 from __future__ import annotations
 
 import itertools
+import threading
 import time
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
@@ -39,6 +52,10 @@ class Request:
     mr_id: int
     mr_len: int
     enqueued_at: float = 0.0
+
+    @property
+    def key(self) -> Tuple[int, int, int]:
+        return (self.s, self.t, self.mr_id)
 
 
 @dataclass
@@ -72,52 +89,122 @@ class MicroBatcher:
         self.max_wait_s = max_wait_s
         self.clock = clock
         self._buckets: Dict[int, List[Request]] = {}
+        self._inflight: Dict[Tuple[int, int, int], Request] = {}
         self._ids = itertools.count()
+        self._lock = threading.RLock()
+        self._ticker: Optional[threading.Thread] = None
+        self._ticker_stop = threading.Event()
         self.batches_full = 0
         self.batches_deadline = 0
         self.batches_drain = 0
+        self.coalesced = 0
+        self.ticker_errors = 0
 
     # ------------------------------------------------------------------ #
     def submit(self, s: int, t: int, mr_id: int, mr_len: int,
                now: Optional[float] = None) -> Tuple[Request, List[Batch]]:
         """Admit one request; return it plus any batches now ready (the
-        request's own bucket on fill, any bucket past its deadline)."""
-        now = self.clock() if now is None else now
-        req = Request(next(self._ids), int(s), int(t), int(mr_id),
-                      int(mr_len), now)
-        bucket = self._buckets.setdefault(mr_len, [])
-        bucket.append(req)
-        out: List[Batch] = []
-        if len(bucket) >= self.batch_size:
-            out.append(self._flush_bucket(mr_len, "full"))
-        # An admission is also a natural poll point for other buckets.
-        out.extend(self.poll(now))
-        return req, out
+        request's own bucket on fill, any bucket past its deadline).
+
+        A duplicate of an in-flight ``(s, t, mr_id)`` is coalesced: the
+        already-queued request comes back (compare ``req_id``) and no new
+        batch slot is taken — the caller must fan the answer out to every
+        position that mapped onto that request.
+        """
+        with self._lock:
+            now = self.clock() if now is None else now
+            key = (int(s), int(t), int(mr_id))
+            existing = self._inflight.get(key)
+            if existing is not None:
+                self.coalesced += 1
+                # still a natural poll point for every bucket's deadline
+                return existing, self.poll(now)
+            req = Request(next(self._ids), key[0], key[1], key[2],
+                          int(mr_len), now)
+            bucket = self._buckets.setdefault(mr_len, [])
+            bucket.append(req)
+            self._inflight[key] = req
+            out: List[Batch] = []
+            if len(bucket) >= self.batch_size:
+                out.append(self._flush_bucket(mr_len, "full"))
+            # An admission is also a natural poll point for other buckets.
+            out.extend(self.poll(now))
+            return req, out
 
     def poll(self, now: Optional[float] = None) -> List[Batch]:
         """Flush every bucket whose oldest request has hit the deadline."""
-        now = self.clock() if now is None else now
-        out: List[Batch] = []
-        for mr_len in list(self._buckets):
-            bucket = self._buckets[mr_len]
-            if bucket and now - bucket[0].enqueued_at >= self.max_wait_s:
-                out.append(self._flush_bucket(mr_len, "deadline"))
-        return out
+        with self._lock:
+            now = self.clock() if now is None else now
+            out: List[Batch] = []
+            for mr_len in list(self._buckets):
+                bucket = self._buckets[mr_len]
+                if bucket and now - bucket[0].enqueued_at >= self.max_wait_s:
+                    out.append(self._flush_bucket(mr_len, "deadline"))
+            return out
 
     def drain(self) -> List[Batch]:
         """Flush everything regardless of fill or age (end of a sync call)."""
-        out = [self._flush_bucket(m, "drain") for m in list(self._buckets)
-               if self._buckets[m]]
-        return out
+        with self._lock:
+            return [self._flush_bucket(m, "drain")
+                    for m in list(self._buckets) if self._buckets[m]]
 
     def pending(self) -> int:
-        return sum(len(b) for b in self._buckets.values())
+        with self._lock:
+            return sum(len(b) for b in self._buckets.values())
+
+    # -- background deadline ticker ------------------------------------- #
+    def start_ticker(self, on_batch: Callable[[Batch], None],
+                     interval_s: Optional[float] = None) -> None:
+        """Start a daemon thread that fires deadline flushes on its own.
+
+        Without a ticker, ``max_wait_s`` is only honored when some caller
+        happens to submit or poll; with it, an underfull bucket flushes at
+        most ~``interval_s`` after its deadline even if no admission ever
+        arrives again. ``on_batch`` runs on the ticker thread for every
+        flushed batch (execute + backfill caches there). Off by default.
+        """
+        if interval_s is None:
+            interval_s = max(self.max_wait_s / 4.0, 1e-4)
+
+        def loop():
+            while not self._ticker_stop.wait(interval_s):
+                for batch in self.poll():
+                    try:
+                        on_batch(batch)
+                    except Exception:
+                        # a failing callback must not kill the ticker —
+                        # later deadline flushes still have to fire
+                        self.ticker_errors += 1
+
+        with self._lock:
+            if self._ticker is not None:
+                raise RuntimeError("ticker already running")
+            self._ticker_stop.clear()
+            self._ticker = threading.Thread(
+                target=loop, name="microbatcher-ticker", daemon=True)
+            self._ticker.start()
+
+    def stop_ticker(self) -> None:
+        """Stop the ticker thread (no-op when not running)."""
+        with self._lock:
+            ticker, self._ticker = self._ticker, None
+            if ticker is None:
+                return
+            self._ticker_stop.set()
+        # join outside the lock: the ticker's poll() needs it to finish
+        ticker.join()
+
+    @property
+    def ticker_running(self) -> bool:
+        return self._ticker is not None
 
     # ------------------------------------------------------------------ #
     def _flush_bucket(self, mr_len: int, reason: str) -> Batch:
         bucket = self._buckets[mr_len]
         reqs, rest = bucket[:self.batch_size], bucket[self.batch_size:]
         self._buckets[mr_len] = rest
+        for r in reqs:
+            self._inflight.pop(r.key, None)
         if reason == "full":
             self.batches_full += 1
         elif reason == "deadline":

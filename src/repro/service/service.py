@@ -118,7 +118,9 @@ class RLCService:
         arrival trace); defaults to the scheduler's clock per admission.
         """
         answers: List[Optional[bool]] = [None] * len(queries)
-        slot: Dict[int, int] = {}   # scheduler req_id -> output position
+        # scheduler req_id -> output positions (> 1 when duplicate in-flight
+        # queries were coalesced onto one request)
+        slot: Dict[int, List[int]] = {}
         for i, (s, t, constraint) in enumerate(queries):
             s, t, mr_id, mr_len = self._admit(s, t, constraint)
             hit = self.cache.get((s, t, mr_id))
@@ -126,34 +128,58 @@ class RLCService:
                 answers[i] = hit
                 continue
             req, ready = self.batcher.submit(s, t, mr_id, mr_len, now)
-            slot[req.req_id] = i
+            slot.setdefault(req.req_id, []).append(i)
             for batch in ready:
                 self._execute(batch, answers, slot)
         for batch in self.batcher.drain():
             self._execute(batch, answers, slot)
+        if any(a is None for a in answers):
+            # a batch was flushed outside this call (ticker thread or a
+            # concurrent query_batch stealing a coalesced key) — fail loud
+            # rather than coerce the hole to False
+            raise RuntimeError(
+                "query_batch lost answers to an external flush; do not "
+                "share a ticker-driven or concurrent MicroBatcher with "
+                "synchronous query_batch")
         self.queries_served += len(queries)
         return [bool(a) for a in answers]
 
-    def _execute(self, batch: Batch, answers: List[Optional[bool]],
-                 slot: Dict[int, int]) -> None:
+    def _run_batch(self, batch: Batch):
+        """Produce one answer per real request (overridden by the sharded
+        service, which fans the batch out across shards instead)."""
         ans, _backend = self.executor.execute(
             batch.s, batch.t, batch.mr_id, batch.n_real)
-        for req, val in zip(batch.requests, ans):
+        return ans
+
+    def _execute(self, batch: Batch, answers: List[Optional[bool]],
+                 slot: Dict[int, List[int]]) -> None:
+        for req, val in zip(batch.requests, self._run_batch(batch)):
             val = bool(val)
             self.cache.put((req.s, req.t, req.mr_id), val)
-            answers[slot[req.req_id]] = val
+            for pos in slot.get(req.req_id, ()):
+                answers[pos] = val
 
     # -- observability --------------------------------------------------- #
     def stats(self) -> dict:
+        """Nested observability snapshot (the bench-JSON shape).
+
+        Every subsystem is one sub-dict — ``executor`` holds both the
+        per-backend latency summaries and the fallback count (previously
+        ``fallbacks`` sat flat at the top level while backend latencies
+        were nested, so JSON consumers had to special-case it). The cache
+        section's ``hit_rate`` is a ratio in [0, 1].
+        """
         return dict(
             queries_served=self.queries_served,
             cache=self.cache.stats.as_dict(),
-            backends=self.executor.stats(),
-            fallbacks=self.executor.fallbacks,
+            executor=dict(
+                backends=self.executor.stats(),
+                fallbacks=self.executor.fallbacks),
             scheduler=dict(
                 batches_full=self.batcher.batches_full,
                 batches_deadline=self.batcher.batches_deadline,
                 batches_drain=self.batcher.batches_drain,
+                coalesced=self.batcher.coalesced,
                 pending=self.batcher.pending()),
             index=dict(
                 entries=self.index.num_entries(),

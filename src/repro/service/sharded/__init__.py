@@ -1,0 +1,52 @@
+"""Sharded multi-host RLC serving.
+
+Scales the single-process :class:`repro.service.RLCService` past one
+host's memory and batch rate by partitioning the frozen index into
+horizontal shards (the FERRARI-style answer to index size limits, applied
+across hosts):
+
+* :mod:`~repro.service.sharded.plan` — contiguous vertex-id ranges,
+  balanced by *entry count* so hub-heavy vertices don't pile one shard;
+* :mod:`~repro.service.sharded.router` — the two-sided router;
+* :mod:`~repro.service.sharded.replica` — N replicas per shard,
+  round-robin reads, rolling atomic hot-swap of rebuilt slices;
+* :mod:`~repro.service.sharded.fanout` — the scatter/gather batch
+  executor regrouping micro-batches into per-``(shard_s, shard_t)``
+  sub-batches;
+* :mod:`~repro.service.sharded.service` — the
+  :class:`ShardedRLCService` facade (drop-in ``query`` / ``query_batch``
+  / ``stats``).
+
+The two-sided routing invariant
+-------------------------------
+The paper answers ``query(s, t, MR+)`` by intersecting ``L_out(s)`` with
+``L_in(t)`` (Algorithm 1). Under sharding those two sides live on
+``shard(s)`` and ``shard(t)`` respectively, so the subsystem maintains one
+invariant: **every query executes on shard(t)**, which always reads
+``L_in(t)`` locally. ``L_out(s)`` is local too iff ``shard(s) ==
+shard(t)`` (the full single-host path over the shard's slice); otherwise
+``shard(s)`` *scatters* s's out-row digest to ``shard(t)`` — one hop, one
+padded row per query — and the merge-join runs against the local in-rows.
+No query ever needs more than one inter-shard hop, and no shard ever
+needs another shard's in-side.
+
+Multi-host is simulated by in-process shard workers sharing one address
+space; when JAX exposes multiple devices, shard layouts are pinned
+round-robin across them and the digest ship becomes a real
+``device_put`` transfer. A real multi-process transport (RPC between
+hosts) is a ROADMAP follow-up — the planner/router/fan-out contracts are
+transport-agnostic.
+"""
+from .fanout import ScatterGatherExecutor
+from .plan import ShardPlan, plan_shards
+from .replica import (ShardReplica, ShardReplicaSet, build_device_layout,
+                      build_replica)
+from .router import Route, TwoSidedRouter
+from .service import ShardedRLCService, ShardedServiceConfig
+
+__all__ = [
+    "Route", "ScatterGatherExecutor", "ShardPlan", "ShardReplica",
+    "ShardReplicaSet", "ShardedRLCService", "ShardedServiceConfig",
+    "TwoSidedRouter", "build_device_layout", "build_replica",
+    "plan_shards",
+]

@@ -1,0 +1,176 @@
+"""Per-shard replica sets with round-robin reads and atomic hot-swap.
+
+Each shard holds ``num_replicas`` interchangeable :class:`ShardReplica`
+objects — a frozen slice, its (optional) device layout, and a
+:class:`BatchExecutor` over them. Read traffic round-robins across
+replicas (:meth:`ShardReplicaSet.acquire`); a rebuild swaps replicas in
+*rolling* fashion: the replacement is fully constructed (freeze + device
+transfer + executor) before a single reference assignment publishes it,
+so a reader that acquired the old replica finishes its batch on a
+consistent index while new acquires already see the new generation —
+there is never a moment when a replica is half-swapped.
+
+When the host exposes multiple JAX devices, each shard's device arrays are
+placed round-robin across them (`shard_id % len(devices)`) — in-process
+workers standing in for real multi-host placement; a failed placement
+degrades to the default device rather than to no device layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.minimum_repeat import LabelSeq
+from repro.core.rlc_index import FrozenRLCIndex, RLCIndex
+
+from ..executor import BatchExecutor
+
+
+@dataclasses.dataclass
+class ShardReplica:
+    """One serveable copy of a shard: frozen slice + device layout +
+    executor."""
+
+    shard_id: int
+    replica_id: int
+    generation: int
+    frozen: FrozenRLCIndex          # slice view: rows [lo, hi) populated
+    device_index: Optional[object]  # DeviceIndex or None (degraded mode)
+    executor: BatchExecutor
+    device: Optional[object] = None  # jax.Device this replica is pinned to
+
+
+def _pin(device_index, device):
+    """Move a DeviceIndex's arrays onto ``device`` (best-effort)."""
+    if device_index is None or device is None:
+        return device_index
+    try:
+        import jax
+        put = lambda a: (jax.device_put(a, device)  # noqa: E731
+                         if isinstance(a, jax.Array) else a)
+        return dataclasses.replace(
+            device_index,
+            out_hub=put(device_index.out_hub),
+            out_mr=put(device_index.out_mr),
+            in_hub=put(device_index.in_hub),
+            in_mr=put(device_index.in_mr),
+            out_key=put(device_index.out_key),
+            in_key=put(device_index.in_key))
+    except Exception:
+        return device_index
+
+
+def build_device_layout(frozen_slice: FrozenRLCIndex, mr_ids,
+                        rows: Optional[Tuple[int, int]] = None,
+                        device=None):
+    """Row-windowed device layout for one shard slice, or None (degraded
+    CPU-only mode). Built once per (shard, generation) and shared by every
+    replica pinned to the same device — the arrays are immutable."""
+    try:
+        from repro.core.device_index import DeviceIndex
+        return _pin(DeviceIndex.from_frozen(frozen_slice, mr_ids,
+                                            rows=rows), device)
+    except Exception:   # no jax / no device
+        return None
+
+
+def build_replica(shard_id: int, replica_id: int, generation: int,
+                  frozen_slice: FrozenRLCIndex, mr_ids,
+                  index: RLCIndex, id_to_mr: Sequence[LabelSeq],
+                  backend: str = "auto", use_device: bool = True,
+                  device=None,
+                  rows: Optional[Tuple[int, int]] = None,
+                  shared_device_index=None) -> ShardReplica:
+    """Fully construct one replica (the unit hot-swap publishes).
+
+    ``rows=(lo, hi)`` is the shard's vertex range: the device layout packs
+    only that row window, so per-shard device memory shrinks ~1/S. Pass
+    ``shared_device_index`` (from :func:`build_device_layout`) to reuse one
+    immutable layout across a shard's replicas instead of re-packing it
+    per replica. ``index``/``id_to_mr`` are the global dict-layout
+    reference — the always-available python fallback; the simulated hosts
+    share it in-process, a real deployment would ship each shard a slice
+    of it.
+    """
+    device_index = None
+    if use_device:
+        device_index = (shared_device_index
+                        if shared_device_index is not None
+                        else build_device_layout(frozen_slice, mr_ids,
+                                                 rows=rows, device=device))
+    executor = BatchExecutor(index, frozen_slice, device_index,
+                             id_to_mr, backend=backend)
+    return ShardReplica(shard_id, replica_id, generation, frozen_slice,
+                        device_index, executor, device)
+
+
+class ShardReplicaSet:
+    """All replicas of one shard; round-robin reads, rolling hot-swap."""
+
+    def __init__(self, shard_id: int, lo: int, hi: int,
+                 replicas: List[ShardReplica]):
+        if not replicas:
+            raise ValueError(f"shard {shard_id} needs >= 1 replica")
+        self.shard_id = shard_id
+        self.lo = lo
+        self.hi = hi
+        self.replicas = replicas
+        self._rr = itertools.count()
+        self._swap_lock = threading.Lock()
+        self.swaps = 0
+
+    @property
+    def num_replicas(self) -> int:
+        return len(self.replicas)
+
+    @property
+    def generation(self) -> int:
+        return min(r.generation for r in self.replicas)
+
+    def acquire(self) -> ShardReplica:
+        """Round-robin pick; the returned replica stays valid for the whole
+        batch even if a swap lands meanwhile (old object keeps serving)."""
+        return self.replicas[next(self._rr) % len(self.replicas)]
+
+    def swap(self, generation: int, frozen_slice: FrozenRLCIndex, mr_ids,
+             index: RLCIndex, id_to_mr: Sequence[LabelSeq],
+             backend: str = "auto", use_device: bool = True) -> None:
+        """Rolling replace of every replica with a freshly built one."""
+        with self._swap_lock:
+            # one device pack per (shard, generation, device); replicas on
+            # the same device share the immutable layout
+            layouts = {}
+            if use_device:
+                for old in self.replicas:
+                    if old.device not in layouts:
+                        layouts[old.device] = build_device_layout(
+                            frozen_slice, mr_ids, rows=(self.lo, self.hi),
+                            device=old.device)
+            for i, old in enumerate(list(self.replicas)):
+                fresh = build_replica(
+                    self.shard_id, old.replica_id, generation, frozen_slice,
+                    mr_ids, index, id_to_mr, backend=backend,
+                    use_device=use_device, device=old.device,
+                    rows=(self.lo, self.hi),
+                    shared_device_index=layouts.get(old.device))
+                # single reference assignment = the atomic publish point
+                self.replicas[i] = fresh
+            self.swaps += 1
+
+    def stats(self) -> dict:
+        r0 = self.replicas[0]
+        return dict(
+            shard=self.shard_id,
+            lo=self.lo, hi=self.hi,
+            vertices=self.hi - self.lo,
+            entries=r0.frozen.num_entries(),
+            size_bytes=r0.frozen.size_bytes(),
+            replicas=self.num_replicas,
+            generation=self.generation,
+            swaps=self.swaps,
+            device=r0.device_index is not None,
+            row_len=(r0.device_index.row_len
+                     if r0.device_index is not None else None),
+        )

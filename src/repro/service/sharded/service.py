@@ -1,0 +1,187 @@
+"""The :class:`ShardedRLCService` facade: plan -> slice -> replicate ->
+route -> scatter/gather.
+
+Drop-in for :class:`repro.service.RLCService` (same ``query`` /
+``query_batch`` / ``stats`` surface, same admission pipeline of parser ->
+result cache -> micro-batcher), but flushed batches fan out across shard
+replica sets instead of one executor::
+
+    g = erdos_renyi(2000, 4.0, 4)
+    svc = ShardedRLCService.build(
+        g, ShardedServiceConfig(k=2, num_shards=4, num_replicas=2))
+    svc.query(3, 1700, "(0 1)+")
+    svc.hot_swap(graph=updated_g)       # rolling rebuild under traffic
+
+See :mod:`repro.service.sharded` for the routing invariant and
+:mod:`repro.service.sharded.fanout` for the scatter/gather mechanics.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+from repro.core.graph import LabeledGraph
+from repro.core.index_builder import build_rlc_index
+from repro.core.minimum_repeat import LabelSeq, mr_id_space
+from repro.core.rlc_index import RLCIndex
+
+from ..cache import ResultCache
+from ..scheduler import Batch, MicroBatcher
+from ..service import RLCService, ServiceConfig
+from .fanout import ScatterGatherExecutor
+from .plan import ShardPlan, plan_shards
+from .replica import ShardReplicaSet, build_device_layout, build_replica
+from .router import TwoSidedRouter
+
+
+@dataclass
+class ShardedServiceConfig(ServiceConfig):
+    num_shards: int = 2
+    num_replicas: int = 1
+
+
+def _shard_devices(num_shards: int) -> List[Optional[object]]:
+    """Round-robin shard -> device placement when >1 device is visible
+    (in-process stand-in for multi-host; None pins nothing)."""
+    try:
+        import jax
+        devs = jax.devices()
+        if len(devs) > 1:
+            return [devs[i % len(devs)] for i in range(num_shards)]
+    except Exception:
+        pass
+    return [None] * num_shards
+
+
+class ShardedRLCService:
+    def __init__(self, graph: LabeledGraph, index: RLCIndex,
+                 config: ShardedServiceConfig):
+        self.graph = graph
+        self.index = index
+        self.config = config
+        self.mr_ids = mr_id_space(graph.num_labels, config.k)
+        self._id_to_mr: List[LabelSeq] = [
+            mr for mr, _ in sorted(self.mr_ids.items(), key=lambda kv: kv[1])]
+        self.frozen = index.freeze(self.mr_ids)
+        self.plan: ShardPlan = plan_shards(self.frozen, config.num_shards)
+        self.generation = 0
+        devices = _shard_devices(config.num_shards)
+        self.shards: List[ShardReplicaSet] = []
+        for sid in range(config.num_shards):
+            lo, hi = self.plan.range(sid)
+            sl = self.frozen.slice_rows(lo, hi)
+            layout = (build_device_layout(sl, self.mr_ids, rows=(lo, hi),
+                                          device=devices[sid])
+                      if config.use_device else None)
+            replicas = [
+                build_replica(sid, rid, self.generation, sl, self.mr_ids,
+                              index, self._id_to_mr, backend=config.backend,
+                              use_device=config.use_device,
+                              device=devices[sid], rows=(lo, hi),
+                              shared_device_index=layout)
+                for rid in range(config.num_replicas)]
+            self.shards.append(ShardReplicaSet(sid, lo, hi, replicas))
+        self.router = TwoSidedRouter(self.plan)
+        self.fanout = ScatterGatherExecutor(self.shards, self.router,
+                                            config.batch_size)
+        self.cache = ResultCache(config.cache_capacity)
+        self.batcher = MicroBatcher(config.batch_size,
+                                    config.max_wait_ms * 1e-3)
+        self.queries_served = 0
+
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def build(cls, graph: LabeledGraph,
+              config: Optional[ShardedServiceConfig] = None,
+              index: Optional[RLCIndex] = None) -> "ShardedRLCService":
+        """Build (or adopt) the RLC index for ``graph``, shard it, serve."""
+        config = config or ShardedServiceConfig()
+        if index is None:
+            index = build_rlc_index(graph, config.k)
+        elif index.k != config.k:
+            raise ValueError(
+                f"index built with k={index.k} but config.k={config.k}")
+        return cls(graph, index, config)
+
+    # -- admission + serving loop (shared with RLCService) --------------- #
+    # Borrowed unbound: the whole parser -> cache -> micro-batcher ->
+    # backfill loop is identical; only _run_batch (scatter/gather fan-out
+    # instead of one executor) differs.
+    parse = RLCService.parse
+    _admit = RLCService._admit
+    query = RLCService.query
+    query_batch = RLCService.query_batch
+    _execute = RLCService._execute
+
+    def _run_batch(self, batch: Batch):
+        return self.fanout.execute(batch)
+
+    # -- hot swap -------------------------------------------------------- #
+    def hot_swap(self, index: Optional[RLCIndex] = None,
+                 graph: Optional[LabeledGraph] = None) -> int:
+        """Atomically replace every shard's frozen/device slice.
+
+        Rebuild the index from ``graph`` (same vertex set — the plan's
+        ranges keep their meaning), or adopt a pre-built ``index``, or —
+        with neither — re-freeze the current index (a no-op refresh).
+        Shards swap rolling, replica by replica; in-flight sub-batches
+        finish on the replica object they acquired. The result cache is
+        cleared — cached answers may be stale against the new index.
+        Returns the new generation number.
+        """
+        if graph is not None:
+            if (graph.num_vertices != self.graph.num_vertices
+                    or graph.num_labels != self.graph.num_labels):
+                raise ValueError(
+                    "hot_swap requires an identical vertex/label space "
+                    f"(got V={graph.num_vertices} L={graph.num_labels}, "
+                    f"serving V={self.graph.num_vertices} "
+                    f"L={self.graph.num_labels})")
+            if index is None:
+                index = build_rlc_index(graph, self.config.k)
+            self.graph = graph
+        if index is None:
+            index = self.index
+        if index.k != self.config.k:
+            raise ValueError(
+                f"index built with k={index.k} but config.k={self.config.k}")
+        if index.num_vertices != self.plan.num_vertices:
+            raise ValueError(
+                f"index has {index.num_vertices} vertices but the shard "
+                f"plan covers {self.plan.num_vertices}")
+        frozen = index.freeze(self.mr_ids)
+        self.generation += 1
+        for rs in self.shards:
+            sl = frozen.slice_rows(rs.lo, rs.hi)
+            rs.swap(self.generation, sl, self.mr_ids, index, self._id_to_mr,
+                    backend=self.config.backend,
+                    use_device=self.config.use_device)
+        self.index = index
+        self.frozen = frozen
+        self.cache.clear()
+        return self.generation
+
+    # -- observability --------------------------------------------------- #
+    def stats(self) -> dict:
+        """The RLCService stats shape plus per-shard breakdowns."""
+        return dict(
+            queries_served=self.queries_served,
+            cache=self.cache.stats.as_dict(),
+            executor=self.fanout.stats(),
+            scheduler=dict(
+                batches_full=self.batcher.batches_full,
+                batches_deadline=self.batcher.batches_deadline,
+                batches_drain=self.batcher.batches_drain,
+                coalesced=self.batcher.coalesced,
+                pending=self.batcher.pending()),
+            router=self.router.stats(),
+            shards=[rs.stats() for rs in self.shards],
+            index=dict(
+                entries=self.frozen.num_entries(),
+                size_bytes=self.frozen.size_bytes(),
+                num_mrs=len(self.mr_ids),
+                num_shards=self.plan.num_shards,
+                num_replicas=self.config.num_replicas,
+                generation=self.generation,
+                plan=self.plan.as_dict()),
+        )

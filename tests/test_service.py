@@ -158,6 +158,107 @@ def test_scheduler_deadline_checked_on_submit():
     assert b.pending() == 1             # the |MR|=2 request still queued
 
 
+def test_scheduler_coalesces_duplicate_inflight_keys():
+    clock = [0.0]
+    b = MicroBatcher(batch_size=4, max_wait_s=100.0, clock=lambda: clock[0])
+    r1, _ = b.submit(7, 9, 2, 1)
+    r2, _ = b.submit(7, 9, 2, 1)        # duplicate while in flight
+    assert r2.req_id == r1.req_id       # same request, no second slot
+    assert b.pending() == 1 and b.coalesced == 1
+    # a different key still takes its own slot
+    r3, _ = b.submit(7, 9, 3, 1)
+    assert r3.req_id != r1.req_id and b.pending() == 2
+    # after the flush the key is no longer in flight -> fresh request
+    batches = b.drain()
+    assert len(batches) == 1 and batches[0].n_real == 2
+    r4, _ = b.submit(7, 9, 2, 1)
+    assert r4.req_id != r1.req_id
+    assert b.coalesced == 1
+
+
+def test_scheduler_coalesced_batch_never_double_books():
+    b = MicroBatcher(batch_size=2, max_wait_s=100.0, clock=lambda: 0.0)
+    b.submit(0, 1, 0, 1)
+    _, ready = b.submit(0, 1, 0, 1)     # coalesced: bucket must NOT fill
+    assert ready == []
+    _, ready = b.submit(2, 3, 0, 1)     # second distinct request fills it
+    assert len(ready) == 1
+    assert [r.s for r in ready[0].requests] == [0, 2]
+
+
+def test_service_fans_coalesced_answers_out():
+    g = erdos_renyi(40, 3.0, 3, seed=17)
+    svc = RLCService.build(g, ServiceConfig(k=2, batch_size=32,
+                                            cache_capacity=0))
+    # duplicates within one query_batch; cache off, so only coalescing
+    # can collapse them
+    qs = [(1, 2, "(0 1)+"), (3, 4, "(0)+"), (1, 2, "(0 1)+"),
+          (1, 2, "(0 1)+"), (3, 4, "(0)+")]
+    got = svc.query_batch(qs)
+    assert got[0] == got[2] == got[3]
+    assert got[1] == got[4]
+    assert got == [bibfs_rlc(g, s, t,
+                             parse_expression(c, num_labels=3, k=2).mr)
+                   for s, t, c in qs]
+    st = svc.stats()["scheduler"]
+    assert st["coalesced"] == 3
+
+
+def test_scheduler_background_ticker_fires_deadline_flush():
+    import threading
+    b = MicroBatcher(batch_size=8, max_wait_s=0.02)
+    flushed = []
+    done = threading.Event()
+
+    def on_batch(batch):
+        flushed.append(batch)
+        done.set()
+
+    assert not b.ticker_running
+    b.start_ticker(on_batch)
+    try:
+        b.submit(0, 1, 0, 1)
+        # no further admissions: only the ticker can flush this bucket
+        assert done.wait(timeout=5.0), "ticker never flushed"
+    finally:
+        b.stop_ticker()
+    assert not b.ticker_running
+    assert len(flushed) == 1
+    assert flushed[0].reason == "deadline" and flushed[0].n_real == 1
+    assert b.pending() == 0
+    with pytest.raises(RuntimeError):   # double start is a bug
+        b.start_ticker(on_batch)
+        b.start_ticker(on_batch)
+    b.stop_ticker()
+
+
+def test_scheduler_ticker_survives_callback_errors():
+    import threading
+    b = MicroBatcher(batch_size=8, max_wait_s=0.01)
+    seen = []
+    ok = threading.Event()
+
+    def flaky(batch):
+        if not seen:
+            seen.append("boom")
+            raise RuntimeError("executor died")
+        ok.set()
+
+    b.start_ticker(flaky)
+    try:
+        b.submit(0, 1, 0, 1)            # first flush: callback raises
+        deadline = 5.0
+        import time as _t
+        t0 = _t.monotonic()
+        while not seen and _t.monotonic() - t0 < deadline:
+            _t.sleep(0.005)
+        b.submit(2, 3, 0, 1)            # second flush must still fire
+        assert ok.wait(timeout=5.0), "ticker died after callback error"
+    finally:
+        b.stop_ticker()
+    assert b.ticker_errors == 1
+
+
 def test_scheduler_buckets_by_mr_length():
     b = MicroBatcher(batch_size=2, max_wait_s=100.0, clock=lambda: 0.0)
     _, r1 = b.submit(0, 0, 0, 1)
@@ -296,8 +397,16 @@ def test_service_stats_shape():
     st = svc.stats()
     assert st["queries_served"] == 3
     assert st["cache"]["hits"] + st["cache"]["misses"] == 3
+    assert 0.0 <= st["cache"]["hit_rate"] <= 1.0    # ratio, not percent
     assert st["index"]["num_mrs"] == len(svc.mr_ids)
     assert st["scheduler"]["pending"] == 0
+    # executor observability is one nested dict: per-backend latencies AND
+    # the fallback count together (no more flat `fallbacks` sibling)
+    assert "fallbacks" not in st
+    assert set(st["executor"]) == {"backends", "fallbacks"}
+    assert st["executor"]["fallbacks"] >= 0
+    for b in st["executor"]["backends"].values():
+        assert b["p99_ms"] >= b["p50_ms"] >= 0.0
 
 
 # ------------------------------------------------------------------ #

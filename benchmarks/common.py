@@ -11,6 +11,7 @@ import csv
 import io
 import sys
 import time
+import zlib
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
@@ -88,11 +89,14 @@ PAPER_GRAPH_STANDINS = [
 
 
 def standin_graph(name: str, scale: float = 1.0):
+    # crc32, NOT hash(): str hashing is randomized per process, which made
+    # the "same" stand-in a different graph on every run — bench rows and
+    # cross-backend comparisons were not reproducible across processes.
     for nm, v, d, l, fam in PAPER_GRAPH_STANDINS:
         if nm == name:
             n = int(v * scale)
+            seed = zlib.crc32(nm.encode()) % 2**31
             if fam == "ba":
-                return barabasi_albert(n, max(2, int(d / 2)), l,
-                                       seed=hash(nm) % 2**31)
-            return erdos_renyi(n, d, l, seed=hash(nm) % 2**31)
+                return barabasi_albert(n, max(2, int(d / 2)), l, seed=seed)
+            return erdos_renyi(n, d, l, seed=seed)
     raise KeyError(name)

@@ -29,6 +29,7 @@ def main(argv=None):
 
     suites = {
         "indexing": lambda: bench_indexing.run(quick),
+        "build_backends": lambda: bench_indexing.run_backends(quick),
         "pruning": lambda: bench_indexing.run_pruning_ablation(),
         "query": lambda: bench_query.run(quick),
         "k": lambda: bench_k.run(quick),

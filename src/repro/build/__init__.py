@@ -1,0 +1,61 @@
+"""Batched index-construction engine (Algorithm 2 as a staged pipeline).
+
+Public surface::
+
+    from repro.build import build_rlc_index, build_rlc_index_with_stats
+    idx = build_rlc_index(g, k=2)                       # auto -> numpy
+    idx, st = build_rlc_index_with_stats(g, 2, backend="pallas")
+    get_backend("numpy", mode="vector").build(g, 2)     # explicit control
+
+Backends (see ``README.md`` in this package for the design):
+
+==========  ============================================================
+``python``  faithful sequential Algorithm 2 — the reference oracle
+``numpy``   hybrid scalar / vectorized bitset waves on label CSR
+``pallas``  hybrid with waves batched through the TPU ``frontier_step``
+            kernels (interpreted on CPU; request explicitly)
+==========  ============================================================
+
+All backends produce bit-identical index entries and pruning counters.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+from repro.core.graph import LabeledGraph
+from repro.core.rlc_index import RLCIndex
+
+from .base import (AUTO_ORDER, BuildBackend, BuildStats, PrunedInserter,
+                   access_schedule, get_backend, list_backends,
+                   register_backend)
+from .reference import IndexBuilder, PythonBackend
+from .numpy_backend import NumpyBackend
+
+try:  # jax is optional at import time; the registry entry follows it
+    from .pallas_backend import PallasBackend  # noqa: F401
+except Exception:  # pragma: no cover - environments without jax
+    PallasBackend = None
+
+__all__ = [
+    "AUTO_ORDER", "BuildBackend", "BuildStats", "IndexBuilder",
+    "NumpyBackend", "PallasBackend", "PrunedInserter", "PythonBackend",
+    "access_schedule", "build_rlc_index", "build_rlc_index_with_stats",
+    "get_backend", "list_backends", "register_backend",
+]
+
+
+def build_rlc_index_with_stats(graph: LabeledGraph, k: int,
+                               backend: str = "auto", **kw
+                               ) -> Tuple[RLCIndex, BuildStats]:
+    """Build the RLC index with the chosen backend; returns (index, stats).
+
+    ``**kw`` reaches the backend constructor (``use_pr1/2/3`` everywhere;
+    ``mode``/``scalar_threshold`` on the batched backends; ``interpret``
+    on pallas).
+    """
+    return get_backend(backend, **kw).build(graph, k)
+
+
+def build_rlc_index(graph: LabeledGraph, k: int, backend: str = "auto",
+                    **kw) -> RLCIndex:
+    return build_rlc_index_with_stats(graph, k, backend=backend, **kw)[0]

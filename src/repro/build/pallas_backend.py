@@ -1,0 +1,121 @@
+"""JAX/Pallas build backend: hub waves through ``frontier_step_many``.
+
+The wave contract is the same as the numpy engine's — expand a batch of
+``(row, vertex)`` frontier pairs one label step — but the expansion runs
+as an OR-AND matmul against the dense label-sliced adjacency stack on
+the accelerator, batching every kernel/phase row of a hub's product
+automaton through one :func:`repro.kernels.label_frontier.
+frontier_step_many` call. Frontier hand-off between device and the
+host-side pruned-insert loop travels bit-packed through
+:mod:`repro.kernels.bitpack` (32 vertices per word — 32x less transfer
+than the f32 frontier it replaces).
+
+Hub batching deliberately stops at one hub: PR1 reads the entries every
+earlier hub completed, so cross-hub waves cannot stay bit-identical
+(see :mod:`repro.build.batched`). On a TPU the win is the per-hub wave
+batch; on CPU the kernels only *interpret*, so this backend defaults to
+hybrid dispatch (device waves for the widest hubs) and exists there for
+validation — request ``mode="vector"`` to force every hub through the
+kernel path, as the equivalence tests do.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.graph import LabeledGraph
+
+from .base import register_backend
+from .batched import BatchedBackend, FrontierEngine
+
+_EMPTY = np.empty(0, dtype=np.int64)
+
+
+def _on_cpu() -> bool:
+    try:
+        import jax
+        return jax.default_backend() == "cpu"
+    except Exception:
+        return True
+
+
+def _pad128(n: int) -> int:
+    return max(128, -(-n // 128) * 128)
+
+
+class PallasEngine(FrontierEngine):
+    def __init__(self, graph: LabeledGraph, interpret: Optional[bool] = None):
+        import jax.numpy as jnp  # deferred: backend is optional
+
+        self.V = graph.num_vertices
+        self.nl = graph.num_labels
+        self.Vp = _pad128(self.V)
+        self.interpret = _on_cpu() if interpret is None else interpret
+        A = np.zeros((self.nl, self.Vp, self.Vp), dtype=np.float32)
+        e = graph.edges
+        A[e[:, 1], e[:, 0], e[:, 2]] = 1
+        self._A = (jnp.asarray(A),                      # forward: u -> v
+                   jnp.asarray(np.swapaxes(A, 1, 2)))  # backward: v -> u
+
+    # ------------------------------------------------------------------ #
+    def _step(self, F: np.ndarray, labels: np.ndarray, backward: bool
+              ) -> np.ndarray:
+        """One device wave: returns the (R, V) boolean next frontier.
+        The device result round-trips bit-packed (kernels/bitpack)."""
+        import jax.numpy as jnp
+        from repro.kernels.bitpack import pack_bits
+        from repro.kernels.label_frontier import frontier_step_many
+
+        G = frontier_step_many(jnp.asarray(F), self._A[backward],
+                               jnp.asarray(labels.astype(np.int32)),
+                               interpret=self.interpret)
+        packed = np.asarray(pack_bits(G))               # (R, Vp/32) uint32
+        bits = (packed[..., None] >> np.arange(32, dtype=np.uint32)) & 1
+        return bits.reshape(len(F), self.Vp)[:, :self.V].astype(bool)
+
+    def expand(self, rows: np.ndarray, ys: np.ndarray, rowlab: np.ndarray,
+               dstrow: np.ndarray, backward: bool
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        R = len(rowlab)
+        F = np.zeros((R, self.Vp), dtype=np.float32)
+        F[rows, ys] = 1.0
+        dense = self._step(F, rowlab, backward)
+        nr, ny = np.nonzero(dense)
+        if not nr.size:
+            return _EMPTY, _EMPTY
+        return dstrow[nr], ny.astype(np.int64)
+
+    def expand_fanout(self, rows: np.ndarray, ys: np.ndarray,
+                      backward: bool) -> Tuple[np.ndarray, np.ndarray]:
+        # duplicate each active parent row once per label; the multi-label
+        # kernel then expands all (parent, label) fans in one call
+        parents = np.unique(rows)
+        P, nl = len(parents), self.nl
+        F = np.zeros((P * nl, self.Vp), dtype=np.float32)
+        loc = np.searchsorted(parents, rows)
+        for l in range(nl):
+            F[loc * nl + l, ys] = 1.0
+        labels = np.tile(np.arange(nl, dtype=np.int32), P)
+        dense = self._step(F, labels, backward)
+        nr, ny = np.nonzero(dense)
+        if not nr.size:
+            return _EMPTY, _EMPTY
+        child = parents[nr // nl] * nl + (nr % nl)
+        return child, ny.astype(np.int64)
+
+
+class PallasBackend(BatchedBackend):
+    """Hybrid build whose wide-hub waves run on the Pallas kernels."""
+
+    name = "pallas"
+
+    def __init__(self, *args, interpret: Optional[bool] = None, **kw):
+        super().__init__(*args, **kw)
+        self.interpret = interpret
+
+    def _make_engine(self, graph: LabeledGraph) -> FrontierEngine:
+        return PallasEngine(graph, interpret=self.interpret)
+
+
+register_backend("pallas", PallasBackend)

@@ -26,6 +26,10 @@ class LabeledGraph:
     _bwd: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = field(
         default=None, repr=False)
     _label_adj: Optional[np.ndarray] = field(default=None, repr=False)
+    _fwd_label_csr: Optional[Tuple[np.ndarray, np.ndarray]] = field(
+        default=None, repr=False)
+    _bwd_label_csr: Optional[Tuple[np.ndarray, np.ndarray]] = field(
+        default=None, repr=False)
 
     # ------------------------------------------------------------------ #
     @staticmethod
@@ -78,17 +82,47 @@ class LabeledGraph:
         s, t = indptr[v], indptr[v + 1]
         return other[s:t], lab[s:t]
 
+    # -- label-partitioned CSR (shared by batched builders, baselines,
+    #    the dense engine, and per-label neighbor slicing) --------------- #
+    def _build_label_csr(self, backward: bool
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+        """CSR keyed on the composite ``vertex * |L| + label``.
+
+        The base CSRs are already (vertex, label)-sorted, so the neighbor
+        array is shared (no copy); only the (V*|L| + 1) indptr is new.
+        ``nbrs[indptr[v*L + l] : indptr[v*L + l + 1]]`` are v's neighbors
+        via label ``l``, in the direction's base-CSR order.
+        """
+        indptr, other, lab = self.bwd if backward else self.fwd
+        nl = self.num_labels
+        keys = np.zeros(self.num_vertices * nl + 1, dtype=np.int64)
+        # edge e sits at row (key_vertex[e], lab[e]); count per composite key
+        vert = np.repeat(np.arange(self.num_vertices), np.diff(indptr))
+        np.add.at(keys, vert * nl + lab + 1, 1)
+        np.cumsum(keys, out=keys)
+        return keys, other
+
+    def label_csr(self, backward: bool = False
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+        """Cached ``(indptr, nbrs)`` label-partitioned adjacency; see
+        :meth:`_build_label_csr` for the layout contract."""
+        if backward:
+            if self._bwd_label_csr is None:
+                self._bwd_label_csr = self._build_label_csr(True)
+            return self._bwd_label_csr
+        if self._fwd_label_csr is None:
+            self._fwd_label_csr = self._build_label_csr(False)
+        return self._fwd_label_csr
+
     def out_neighbors_with_label(self, v: int, label: int) -> np.ndarray:
-        other, lab = self.out_edges(v)
-        lo = np.searchsorted(lab, label, side="left")
-        hi = np.searchsorted(lab, label, side="right")
-        return other[lo:hi]
+        indptr, nbrs = self.label_csr(backward=False)
+        key = v * self.num_labels + label
+        return nbrs[indptr[key]:indptr[key + 1]]
 
     def in_neighbors_with_label(self, v: int, label: int) -> np.ndarray:
-        other, lab = self.in_edges(v)
-        lo = np.searchsorted(lab, label, side="left")
-        hi = np.searchsorted(lab, label, side="right")
-        return other[lo:hi]
+        indptr, nbrs = self.label_csr(backward=True)
+        key = v * self.num_labels + label
+        return nbrs[indptr[key]:indptr[key + 1]]
 
     # -- degrees & the IN-OUT vertex ordering (paper §V-B) -------------- #
     def out_degree(self) -> np.ndarray:
@@ -116,12 +150,17 @@ class LabeledGraph:
     # -- dense per-label adjacency for the semiring engine -------------- #
     def label_adjacency(self, dtype=np.float32) -> np.ndarray:
         """Dense (|L|, n, n) boolean-as-``dtype`` adjacency stack.
-        ``A[l, u, v] = 1`` iff edge (u, l, v)."""
+        ``A[l, u, v] = 1`` iff edge (u, l, v).
+
+        Derived from :meth:`label_csr` so the dense engine, the baselines,
+        and the batched builders all share one adjacency source.
+        """
         if self._label_adj is None or self._label_adj.dtype != dtype:
-            n = self.num_vertices
-            A = np.zeros((self.num_labels, n, n), dtype=dtype)
-            e = self.edges
-            A[e[:, 1], e[:, 0], e[:, 2]] = 1
+            n, nl = self.num_vertices, self.num_labels
+            indptr, nbrs = self.label_csr(backward=False)
+            keys = np.repeat(np.arange(n * nl), np.diff(indptr))
+            A = np.zeros((nl, n, n), dtype=dtype)
+            A[keys % nl, keys // nl, nbrs] = 1
             self._label_adj = A
         return self._label_adj
 

@@ -1,183 +1,17 @@
-"""Algorithm 2 — the RLC indexing algorithm (paper §V-B), faithful version.
+"""Back-compat shim — Algorithm 2 now lives in :mod:`repro.build`.
 
-Per vertex ``v`` in IN-OUT access order, a *kernel-based search* (KBS) runs
-backward (creating ``L_out`` entries at the vertices it visits) then forward
-(creating ``L_in`` entries). Each KBS has two phases:
-
-* **kernel-search** — an exhaustive BFS over (vertex, label-sequence) states
-  up to depth ``k``. Every visited state with ``|MR(seq)| <= k`` yields a
-  tentative index entry (subject to PR1/PR2) *and* contributes its MR as an
-  eager kernel candidate with the visited vertex as a frontier seed.
-* **kernel-BFS** — per kernel candidate ``L`` (``m = |L|``), a BFS over the
-  product automaton ``V x {0..m-1}`` that only follows ``L``-cyclic label
-  transitions. Whenever a full repeat boundary is crossed into vertex ``y``
-  (state 0), the entry ``(v, L)`` is inserted at ``y``; if PR1/PR2 prune the
-  insertion, **PR3** cuts the whole search subtree behind ``y``.
-
-Pruning rules (backward case; forward is symmetric):
-  PR1  skip the entry if ``Query(y, v, L^+)`` already holds on the current
-       index snapshot;
-  PR2  skip if ``aid(v) > aid(y)`` (the visited vertex is a better hub and
-       its own KBS covers the pair);
-  PR3  on PR1/PR2 firing *during kernel-BFS*, also skip ``y``'s search
-       subtree (Theorem 3 proves completeness is preserved).
-
-Note on the paper's Algorithm 2 listing: line 36 reads
-``if i=1 and insert(y,v,L) then continue`` — taken literally that prunes on
-*successful* insertion, contradicting PR3's definition, Example 6 and the
-Lemma 5 proof, all of which prune when PR1/PR2 *fire* (insert fails). We
-follow the prose + proofs (prune on failure); tests validate soundness +
-completeness against the product-automaton oracle on thousands of graphs.
+The historical surface (``IndexBuilder``, ``build_rlc_index``,
+``build_rlc_index_with_stats``, ``BuildStats``) is re-exported unchanged;
+``build_rlc_index(g, k)`` now resolves ``backend="auto"`` (the vectorized
+numpy pipeline, bit-identical to the python reference). The faithful
+sequential implementation is :class:`repro.build.reference.PythonBackend`;
+the stage decomposition and the Algorithm 2 line-36 note moved to
+``src/repro/build/README.md``.
 """
 from __future__ import annotations
 
-from collections import deque
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from repro.build import (BuildStats, IndexBuilder, build_rlc_index,
+                         build_rlc_index_with_stats)
 
-import numpy as np
-
-from .graph import LabeledGraph
-from .minimum_repeat import LabelSeq, minimum_repeat
-from .rlc_index import RLCIndex
-
-
-@dataclass
-class BuildStats:
-    kernel_search_states: int = 0
-    kernel_bfs_states: int = 0
-    inserted: int = 0
-    pruned_pr1: int = 0
-    pruned_pr2: int = 0
-    pr3_cuts: int = 0
-
-
-class IndexBuilder:
-    """Faithful, sequential Algorithm 2 (the paper's reference semantics)."""
-
-    def __init__(self, graph: LabeledGraph, k: int,
-                 use_pr1: bool = True, use_pr2: bool = True,
-                 use_pr3: bool = True):
-        self.g = graph
-        self.k = int(k)
-        self.use_pr1 = use_pr1
-        self.use_pr2 = use_pr2
-        self.use_pr3 = use_pr3
-        self.stats = BuildStats()
-        self.index = RLCIndex(graph.num_vertices, self.k,
-                              graph.access_ids())
-
-    # ------------------------------------------------------------------ #
-    def build(self) -> RLCIndex:
-        order = self.g.access_order()
-        for v in order:
-            self._kbs(int(v), backward=True)
-            self._kbs(int(v), backward=False)
-        return self.index
-
-    # -- insert with PR1/PR2 (paper Algorithm 2, lines 19-24) ----------- #
-    def _insert(self, y: int, v: int, L: LabelSeq, backward: bool) -> bool:
-        """Try to record hub ``v`` at visited vertex ``y``. Returns True if
-        the entry was added, False if pruned (PR1/PR2) — the PR3 signal."""
-        idx = self.index
-        if self.use_pr2 and idx.aid[v] > idx.aid[y]:
-            self.stats.pruned_pr2 += 1
-            return False
-        if backward:
-            s, t = y, v   # entry (v, L) in L_out(y):  y ~~L+~~> v
-        else:
-            s, t = v, y   # entry (v, L) in L_in(y):   v ~~L+~~> y
-        if self.use_pr1 and idx.query(s, t, L):
-            self.stats.pruned_pr1 += 1
-            return False
-        if backward:
-            idx.add_out(y, v, L)
-        else:
-            idx.add_in(y, v, L)
-        self.stats.inserted += 1
-        return True
-
-    # -- one full KBS from v --------------------------------------------- #
-    def _kbs(self, v: int, backward: bool) -> None:
-        kernels = self._kernel_search(v, backward)
-        for L, frontier in kernels.items():
-            self._kernel_bfs(v, L, frontier, backward)
-
-    def _neighbors(self, x: int, backward: bool):
-        return (self.g.in_edges(x) if backward else self.g.out_edges(x))
-
-    def _kernel_search(self, v: int, backward: bool
-                       ) -> Dict[LabelSeq, Set[int]]:
-        """Phase 1: exhaustive BFS to depth k over (vertex, seq) states.
-
-        Inserts entries for every state whose MR has length <= k (PR3 does
-        not apply here, paper §V-B) and returns eager kernel candidates:
-        ``{L: frontier vertices whose path-so-far equals L^h}``.
-        """
-        k = self.k
-        seen: Set[Tuple[int, LabelSeq]] = {(v, ())}
-        frontier: deque = deque([(v, ())])
-        kernels: Dict[LabelSeq, Set[int]] = {}
-        while frontier:
-            x, seq = frontier.popleft()
-            nbrs, labs = self._neighbors(x, backward)
-            for y, lab in zip(nbrs.tolist(), labs.tolist()):
-                seq2 = ((lab,) + seq) if backward else (seq + (lab,))
-                state = (y, seq2)
-                if state in seen:
-                    continue
-                seen.add(state)
-                self.stats.kernel_search_states += 1
-                L = minimum_repeat(seq2)
-                if len(L) <= k:
-                    # |MR| <= k  =>  seq2 == L^h: a genuine entry AND an
-                    # eager kernel candidate seeded at y (repeat boundary).
-                    self._insert(y, v, L, backward)
-                    kernels.setdefault(L, set()).add(y)
-                if len(seq2) < k:
-                    frontier.append((y, seq2))
-        return kernels
-
-    def _kernel_bfs(self, v: int, L: LabelSeq, seeds: Set[int],
-                    backward: bool) -> None:
-        """Phase 2: product-automaton BFS guided by ``L^+`` from ``seeds``.
-
-        State ``(y, p)``: ``p`` labels consumed since the last full-repeat
-        boundary. Backward search prepends labels, so from state ``p`` the
-        expected edge label is ``L[m-1-p]``; forward appends, expecting
-        ``L[p]``. Insertion fires when ``p`` wraps to 0 (full repeat).
-        """
-        m = len(L)
-        visited: Set[Tuple[int, int]] = {(x, 0) for x in seeds}
-        q: deque = deque(visited)
-        while q:
-            x, p = q.popleft()
-            want = L[m - 1 - p] if backward else L[p]
-            nbrs, labs = self._neighbors(x, backward)
-            for y, lab in zip(nbrs.tolist(), labs.tolist()):
-                if lab != want:
-                    continue
-                p2 = (p + 1) % m
-                if (y, p2) in visited:
-                    continue
-                self.stats.kernel_bfs_states += 1
-                if p2 == 0:
-                    if not self._insert(y, v, L, backward):
-                        if self.use_pr3:
-                            # PR3: cut the subtree behind y (do not expand).
-                            self.stats.pr3_cuts += 1
-                            visited.add((y, p2))
-                            continue
-                visited.add((y, p2))
-                q.append((y, p2))
-
-
-def build_rlc_index(graph: LabeledGraph, k: int, **kw) -> RLCIndex:
-    return IndexBuilder(graph, k, **kw).build()
-
-
-def build_rlc_index_with_stats(graph: LabeledGraph, k: int, **kw
-                               ) -> Tuple[RLCIndex, BuildStats]:
-    b = IndexBuilder(graph, k, **kw)
-    idx = b.build()
-    return idx, b.stats
+__all__ = ["BuildStats", "IndexBuilder", "build_rlc_index",
+           "build_rlc_index_with_stats"]

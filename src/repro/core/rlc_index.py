@@ -28,6 +28,43 @@ from .minimum_repeat import LabelSeq
 Entry = Tuple[int, LabelSeq]          # (hub vertex id, minimum repeat)
 EntryMap = Dict[int, Set[LabelSeq]]   # hub vertex id -> set of MRs
 
+_BIT = np.left_shift(np.uint8(1), np.arange(8, dtype=np.uint8))
+
+
+class BitMirror:
+    """Bit-packed mirror of the entry sets, keyed per minimum repeat.
+
+    ``out[c, x]`` is a little-endian packed bitset over visited vertices
+    ``y`` with bit ``y`` set iff ``(x, mr_c) in L_out(y)`` (``in_`` is the
+    symmetric L_in mirror). One row is one hub's footprint for one MR, so
+    Algorithm 2's PR1 coverage check for a whole frontier collapses to a
+    handful of row ORs + a bit gather (:meth:`RLCIndex.pr1_cover_out`) —
+    the numpy twin of the 32-wide TPU packing in
+    :mod:`repro.kernels.bitpack`.
+    """
+
+    def __init__(self, num_mrs: int, num_vertices: int):
+        self.num_vertices = num_vertices
+        self.words = (num_vertices + 7) // 8
+        self.out = np.zeros((num_mrs, num_vertices, self.words), np.uint8)
+        self.in_ = np.zeros((num_mrs, num_vertices, self.words), np.uint8)
+
+    def nbytes(self) -> int:
+        return self.out.nbytes + self.in_.nbytes
+
+    def set1(self, side: np.ndarray, c: int, hub: int, y: int) -> None:
+        side[c, hub, y >> 3] |= _BIT[y & 7]
+
+    def set_many(self, side: np.ndarray, c: int, hub: int, ys) -> None:
+        if len(ys) <= 16:                      # bulk update doesn't pay
+            row = side[c, hub]
+            for y in ys:
+                row[y >> 3] |= _BIT[y & 7]
+            return
+        row = np.zeros(self.num_vertices, np.uint8)
+        row[np.asarray(ys)] = 1
+        side[c, hub] |= np.packbits(row, bitorder="little")[:self.words]
+
 
 def merge_join_rows(out_hub: np.ndarray, out_mr: np.ndarray,
                     in_hub: np.ndarray, in_mr: np.ndarray,
@@ -84,6 +121,11 @@ class RLCIndex:
     aid: np.ndarray  # (n,) int64, 1-based access ids
     l_in: List[EntryMap] = field(default_factory=list)
     l_out: List[EntryMap] = field(default_factory=list)
+    # optional packed coverage mirror (attached by the batched builders)
+    _mirror: Optional[BitMirror] = field(default=None, repr=False,
+                                         compare=False)
+    _mr_ids: Optional[Dict[LabelSeq, int]] = field(default=None, repr=False,
+                                                   compare=False)
 
     def __post_init__(self):
         if not self.l_in:
@@ -92,13 +134,50 @@ class RLCIndex:
             self.l_out = [dict() for _ in range(self.num_vertices)]
 
     # -- construction-time mutation ------------------------------------- #
+    def attach_bit_mirror(self, mr_ids: Dict[LabelSeq, int]) -> BitMirror:
+        """Attach (and backfill) a :class:`BitMirror` so subsequent
+        ``add_out``/``add_in`` calls keep it in sync and the vectorized PR1
+        batch queries become available."""
+        self._mr_ids = dict(mr_ids)
+        self._mirror = BitMirror(len(mr_ids), self.num_vertices)
+        for side, maps in ((self._mirror.out, self.l_out),
+                           (self._mirror.in_, self.l_in)):
+            for y, d in enumerate(maps):
+                for hub, mrs in d.items():
+                    for mr in mrs:
+                        self._mirror.set1(side, self._mr_ids[mr], hub, y)
+        return self._mirror
+
     def add_out(self, v: int, hub: int, mr: LabelSeq) -> None:
         """Record ``(hub, mr)`` in ``L_out(v)`` (v ~~mr^+~~> hub)."""
         self.l_out[v].setdefault(hub, set()).add(mr)
+        if self._mirror is not None:
+            self._mirror.set1(self._mirror.out, self._mr_ids[mr], hub, v)
 
     def add_in(self, v: int, hub: int, mr: LabelSeq) -> None:
         """Record ``(hub, mr)`` in ``L_in(v)`` (hub ~~mr^+~~> v)."""
         self.l_in[v].setdefault(hub, set()).add(mr)
+        if self._mirror is not None:
+            self._mirror.set1(self._mirror.in_, self._mr_ids[mr], hub, v)
+
+    def add_out_many(self, vs: Sequence[int], hub: int, mr: LabelSeq
+                     ) -> None:
+        """Bulk :meth:`add_out`: one ``(hub, mr)`` entry at every vertex in
+        ``vs`` (one batched mirror update instead of |vs| bit pokes)."""
+        for v in vs:
+            self.l_out[v].setdefault(hub, set()).add(mr)
+        if self._mirror is not None and len(vs):
+            self._mirror.set_many(self._mirror.out, self._mr_ids[mr], hub,
+                                  vs)
+
+    def add_in_many(self, vs: Sequence[int], hub: int, mr: LabelSeq
+                    ) -> None:
+        """Bulk :meth:`add_in` (see :meth:`add_out_many`)."""
+        for v in vs:
+            self.l_in[v].setdefault(hub, set()).add(mr)
+        if self._mirror is not None and len(vs):
+            self._mirror.set_many(self._mirror.in_, self._mr_ids[mr], hub,
+                                  vs)
 
     def has_out(self, v: int, hub: int, mr: LabelSeq) -> bool:
         s = self.l_out[v].get(hub)
@@ -133,6 +212,67 @@ class RLCIndex:
                     if i is not None and L in i:
                         return True
         return False
+
+    # -- vectorized PR1 batch query (Algorithm 2 insert-side) -------------- #
+    def pr1_cover_out(self, hub: int, mr: LabelSeq) -> np.ndarray:
+        """Packed bitset over ``y`` of ``Query(y, hub, mr^+)`` — the PR1
+        predicate a backward KBS of ``hub`` evaluates at every visited
+        vertex. Requires an attached bit mirror; a handful of row ORs:
+        Case-2 direct rows plus Case-1 through each hub of ``L_in(hub)``.
+        """
+        m, c = self._mirror, self._mr_ids[mr]
+        cov = m.out[c, hub].copy()               # (hub, mr) in L_out(y)
+        for x, mrs in self.l_in[hub].items():
+            if mr in mrs:
+                cov |= m.out[c, x]               # Case 1 via hub x
+                cov[x >> 3] |= _BIT[x & 7]       # (y, mr) in L_in(hub)
+        return cov
+
+    def pr1_cover_in(self, hub: int, mr: LabelSeq) -> np.ndarray:
+        """Symmetric to :meth:`pr1_cover_out`: packed ``Query(hub, y, mr^+)``
+        over ``y`` — PR1 for the forward KBS of ``hub``."""
+        m, c = self._mirror, self._mr_ids[mr]
+        cov = m.in_[c, hub].copy()
+        for x, mrs in self.l_out[hub].items():
+            if mr in mrs:
+                cov |= m.in_[c, x]
+                cov[x >> 3] |= _BIT[x & 7]
+        return cov
+
+    def pr1_cover_all(self, hub: int, backward: bool = True) -> np.ndarray:
+        """(C, W) packed PR1 coverage rows for *every* MR at once — row
+        ``c`` equals :meth:`pr1_cover_out` (backward) /
+        :meth:`pr1_cover_in` (forward) for ``mr_c``. The batched builders
+        fetch this once per (hub, direction) phase; Algorithm 2 guarantees
+        the phase's PR1 outcomes depend only on the pre-phase snapshot."""
+        m = self._mirror
+        side = m.out if backward else m.in_
+        row_src = self.l_in[hub] if backward else self.l_out[hub]
+        cov = side[:, hub, :].copy()
+        for x, mrs in row_src.items():
+            xb, xbit = x >> 3, _BIT[x & 7]
+            for mr in mrs:
+                c = self._mr_ids[mr]
+                cov[c] |= side[c, x]
+                cov[c, xb] |= xbit
+        return cov
+
+    def pr1_batch(self, ys: Sequence[int], hub: int, mr: LabelSeq,
+                  backward: bool = True) -> np.ndarray:
+        """Vectorized PR1: ``[Query(y, hub, mr^+)]`` (backward) or
+        ``[Query(hub, y, mr^+)]`` (forward) for every ``y`` in ``ys``.
+        Uses the packed mirror when attached, else falls back to per-query
+        Algorithm 1."""
+        ys = np.asarray(ys, dtype=np.int64)
+        if self._mirror is not None:
+            cov = (self.pr1_cover_out(hub, mr) if backward
+                   else self.pr1_cover_in(hub, mr))
+            return (cov[ys >> 3] & _BIT[ys & 7]) != 0
+        if backward:
+            return np.array([self.query(int(y), hub, mr) for y in ys],
+                            dtype=bool)
+        return np.array([self.query(hub, int(y), mr) for y in ys],
+                        dtype=bool)
 
     # -- stats & invariants ------------------------------------------------ #
     def num_entries(self) -> int:

@@ -19,8 +19,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
+from repro.build import BuildStats, build_rlc_index_with_stats
 from repro.core.graph import LabeledGraph
-from repro.core.index_builder import build_rlc_index
 from repro.core.minimum_repeat import LabelSeq, mr_id_space
 from repro.core.rlc_index import RLCIndex
 
@@ -40,16 +40,19 @@ class ServiceConfig:
     max_wait_ms: float = 2.0
     cache_capacity: int = 4096
     backend: str = "auto"           # "auto" | "pallas" | "sorted" | "numpy" | "python"
+    build_backend: str = "auto"     # repro.build backend for (re)builds
     use_device: bool = True         # build the padded DeviceIndex layout
     label_names: Optional[Dict[str, int]] = None  # e.g. {"knows": 0, ...}
 
 
 class RLCService:
     def __init__(self, graph: LabeledGraph, index: RLCIndex,
-                 config: ServiceConfig):
+                 config: ServiceConfig,
+                 build_stats: Optional[BuildStats] = None):
         self.graph = graph
         self.index = index
         self.config = config
+        self.build_stats = build_stats   # None when the index was adopted
         self.mr_ids = mr_id_space(graph.num_labels, config.k)
         self._id_to_mr: List[LabelSeq] = [
             mr for mr, _ in sorted(self.mr_ids.items(), key=lambda kv: kv[1])]
@@ -75,14 +78,17 @@ class RLCService:
     def build(cls, graph: LabeledGraph,
               config: Optional[ServiceConfig] = None,
               index: Optional[RLCIndex] = None) -> "RLCService":
-        """Build (or adopt) the RLC index for ``graph`` and start serving."""
+        """Build (or adopt) the RLC index for ``graph`` and start serving.
+        Builds go through the configured :mod:`repro.build` backend."""
         config = config or ServiceConfig()
+        build_stats = None
         if index is None:
-            index = build_rlc_index(graph, config.k)
+            index, build_stats = build_rlc_index_with_stats(
+                graph, config.k, backend=config.build_backend)
         elif index.k != config.k:
             raise ValueError(
                 f"index built with k={index.k} but config.k={config.k}")
-        return cls(graph, index, config)
+        return cls(graph, index, config, build_stats=build_stats)
 
     # -- admission ------------------------------------------------------ #
     def parse(self, constraint: Constraint) -> PathExpression:
@@ -181,6 +187,8 @@ class RLCService:
                 batches_drain=self.batcher.batches_drain,
                 coalesced=self.batcher.coalesced,
                 pending=self.batcher.pending()),
+            build=(self.build_stats.as_dict()
+                   if self.build_stats is not None else None),
             index=dict(
                 entries=self.index.num_entries(),
                 size_bytes=self.index.size_bytes(),

@@ -120,6 +120,7 @@ class ShardReplicaSet:
         self._rr = itertools.count()
         self._swap_lock = threading.Lock()
         self.swaps = 0
+        self.last_build_backend: Optional[str] = None
 
     @property
     def num_replicas(self) -> int:
@@ -136,9 +137,13 @@ class ShardReplicaSet:
 
     def swap(self, generation: int, frozen_slice: FrozenRLCIndex, mr_ids,
              index: RLCIndex, id_to_mr: Sequence[LabelSeq],
-             backend: str = "auto", use_device: bool = True) -> None:
-        """Rolling replace of every replica with a freshly built one."""
+             backend: str = "auto", use_device: bool = True,
+             build_backend: Optional[str] = None) -> None:
+        """Rolling replace of every replica with a freshly built one.
+        ``build_backend`` records which :mod:`repro.build` backend
+        produced the incoming index (surfaced in :meth:`stats`)."""
         with self._swap_lock:
+            self.last_build_backend = build_backend
             # one device pack per (shard, generation, device); replicas on
             # the same device share the immutable layout
             layouts = {}
@@ -170,6 +175,7 @@ class ShardReplicaSet:
             replicas=self.num_replicas,
             generation=self.generation,
             swaps=self.swaps,
+            build_backend=self.last_build_backend,
             device=r0.device_index is not None,
             row_len=(r0.device_index.row_len
                      if r0.device_index is not None else None),

@@ -20,8 +20,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import List, Optional
 
+from repro.build import BuildStats, build_rlc_index_with_stats
 from repro.core.graph import LabeledGraph
-from repro.core.index_builder import build_rlc_index
 from repro.core.minimum_repeat import LabelSeq, mr_id_space
 from repro.core.rlc_index import RLCIndex
 
@@ -55,10 +55,12 @@ def _shard_devices(num_shards: int) -> List[Optional[object]]:
 
 class ShardedRLCService:
     def __init__(self, graph: LabeledGraph, index: RLCIndex,
-                 config: ShardedServiceConfig):
+                 config: ShardedServiceConfig,
+                 build_stats: Optional[BuildStats] = None):
         self.graph = graph
         self.index = index
         self.config = config
+        self.build_stats = build_stats   # None when the index was adopted
         self.mr_ids = mr_id_space(graph.num_labels, config.k)
         self._id_to_mr: List[LabelSeq] = [
             mr for mr, _ in sorted(self.mr_ids.items(), key=lambda kv: kv[1])]
@@ -94,14 +96,17 @@ class ShardedRLCService:
     def build(cls, graph: LabeledGraph,
               config: Optional[ShardedServiceConfig] = None,
               index: Optional[RLCIndex] = None) -> "ShardedRLCService":
-        """Build (or adopt) the RLC index for ``graph``, shard it, serve."""
+        """Build (or adopt) the RLC index for ``graph``, shard it, serve.
+        Builds go through the configured :mod:`repro.build` backend."""
         config = config or ShardedServiceConfig()
+        build_stats = None
         if index is None:
-            index = build_rlc_index(graph, config.k)
+            index, build_stats = build_rlc_index_with_stats(
+                graph, config.k, backend=config.build_backend)
         elif index.k != config.k:
             raise ValueError(
                 f"index built with k={index.k} but config.k={config.k}")
-        return cls(graph, index, config)
+        return cls(graph, index, config, build_stats=build_stats)
 
     # -- admission + serving loop (shared with RLCService) --------------- #
     # Borrowed unbound: the whole parser -> cache -> micro-batcher ->
@@ -118,17 +123,26 @@ class ShardedRLCService:
 
     # -- hot swap -------------------------------------------------------- #
     def hot_swap(self, index: Optional[RLCIndex] = None,
-                 graph: Optional[LabeledGraph] = None) -> int:
+                 graph: Optional[LabeledGraph] = None,
+                 build_backend: Optional[str] = None) -> int:
         """Atomically replace every shard's frozen/device slice.
 
         Rebuild the index from ``graph`` (same vertex set — the plan's
         ranges keep their meaning), or adopt a pre-built ``index``, or —
         with neither — re-freeze the current index (a no-op refresh).
-        Shards swap rolling, replica by replica; in-flight sub-batches
-        finish on the replica object they acquired. The result cache is
-        cleared — cached answers may be stale against the new index.
-        Returns the new generation number.
+        Rebuilds run on ``build_backend`` (default: the configured
+        ``config.build_backend``, i.e. a batched builder — the rebuild
+        pause stops paying the sequential python path). Shards swap
+        rolling, replica by replica; in-flight sub-batches finish on the
+        replica object they acquired. The result cache is cleared —
+        cached answers may be stale against the new index. Returns the
+        new generation number.
         """
+        build_backend = build_backend or self.config.build_backend
+        rebuilt = False
+        if index is not None:
+            # adopted pre-built index: we didn't build it, don't claim to
+            self.build_stats = None
         if graph is not None:
             if (graph.num_vertices != self.graph.num_vertices
                     or graph.num_labels != self.graph.num_labels):
@@ -138,7 +152,9 @@ class ShardedRLCService:
                     f"serving V={self.graph.num_vertices} "
                     f"L={self.graph.num_labels})")
             if index is None:
-                index = build_rlc_index(graph, self.config.k)
+                index, self.build_stats = build_rlc_index_with_stats(
+                    graph, self.config.k, backend=build_backend)
+                rebuilt = True
             self.graph = graph
         if index is None:
             index = self.index
@@ -155,7 +171,8 @@ class ShardedRLCService:
             sl = frozen.slice_rows(rs.lo, rs.hi)
             rs.swap(self.generation, sl, self.mr_ids, index, self._id_to_mr,
                     backend=self.config.backend,
-                    use_device=self.config.use_device)
+                    use_device=self.config.use_device,
+                    build_backend=build_backend if rebuilt else None)
         self.index = index
         self.frozen = frozen
         self.cache.clear()
@@ -175,6 +192,8 @@ class ShardedRLCService:
                 coalesced=self.batcher.coalesced,
                 pending=self.batcher.pending()),
             router=self.router.stats(),
+            build=(self.build_stats.as_dict()
+                   if self.build_stats is not None else None),
             shards=[rs.stats() for rs in self.shards],
             index=dict(
                 entries=self.frozen.num_entries(),

@@ -1,0 +1,184 @@
+"""Build-backend equivalence: every backend of the staged pipeline must
+produce bit-identical index entries AND pruning counters to the python
+reference, across graph families, k, |L|, loop density, and pruning-flag
+ablations — plus counter sanity invariants and the serving integration
+(stats block, hot-swap on a non-python backend)."""
+import numpy as np
+import pytest
+
+from repro.build import (BuildStats, build_rlc_index, build_rlc_index_with_stats,
+                         get_backend, list_backends)
+from repro.core.baselines import bfs_rlc
+from repro.core.minimum_repeat import enumerate_mrs
+from repro.graphgen import (barabasi_albert, erdos_renyi, fig2_graph,
+                            random_labeled_graph)
+
+
+def entry_sets(idx):
+    out = tuple(sorted((v, h, m) for v, d in enumerate(idx.l_out)
+                       for h, ms in d.items() for m in ms))
+    inn = tuple(sorted((v, h, m) for v, d in enumerate(idx.l_in)
+                       for h, ms in d.items() for m in ms))
+    return out, inn
+
+
+def assert_equivalent(g, k, flags=None, backends=(("numpy", {}),)):
+    flags = flags or {}
+    ref_idx, ref_stats = build_rlc_index_with_stats(
+        g, k, backend="python", **flags)
+    ref_entries = entry_sets(ref_idx)
+    for name, kw in backends:
+        idx, stats = build_rlc_index_with_stats(g, k, backend=name,
+                                                **flags, **kw)
+        assert entry_sets(idx) == ref_entries, (name, kw, flags)
+        assert stats.counters() == ref_stats.counters(), (name, kw, flags)
+    return ref_idx, ref_stats
+
+
+NUMPY_MODES = [("numpy", dict(mode="hybrid")),
+               ("numpy", dict(mode="vector")),
+               ("numpy", dict(mode="bits")),
+               ("numpy", dict(mode="scalar"))]
+
+
+# ------------------------------------------------------------------ #
+# Property sweep: vary V, |L|, k, loop density across families
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("k,num_labels,loops", [
+    (1, 2, 0.0), (2, 2, 0.2), (2, 3, 0.0), (3, 2, 0.3), (3, 3, 0.1)])
+def test_numpy_matches_python_random(seed, k, num_labels, loops):
+    g = random_labeled_graph(num_vertices=12, num_edges=40,
+                             num_labels=num_labels, seed=seed,
+                             self_loop_frac=loops)
+    assert_equivalent(g, k, backends=NUMPY_MODES)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_numpy_matches_python_families(seed):
+    assert_equivalent(erdos_renyi(30, 3.0, 4, seed=seed), 2,
+                      backends=NUMPY_MODES)
+    assert_equivalent(barabasi_albert(24, 3, 3, seed=seed), 2,
+                      backends=NUMPY_MODES)
+
+
+@pytest.mark.parametrize("flags", [
+    dict(use_pr1=False), dict(use_pr2=False), dict(use_pr3=False),
+    dict(use_pr1=False, use_pr2=False, use_pr3=False)])
+def test_numpy_matches_python_pruning_ablations(flags):
+    g = random_labeled_graph(num_vertices=14, num_edges=50, num_labels=2,
+                             seed=7, self_loop_frac=0.2)
+    assert_equivalent(g, 2, flags=flags, backends=NUMPY_MODES)
+
+
+def test_numpy_answers_match_oracle():
+    """End-to-end: batched build answers == product-automaton oracle."""
+    g = random_labeled_graph(num_vertices=12, num_edges=40, num_labels=2,
+                             seed=3, self_loop_frac=0.15)
+    idx = build_rlc_index(g, 2, backend="numpy")
+    for s in range(g.num_vertices):
+        for t in range(g.num_vertices):
+            for L in enumerate_mrs(2, 2):
+                assert idx.query(s, t, L) == bfs_rlc(g, s, t, L)
+
+
+def test_fig2_all_backends():
+    g, _ = fig2_graph()
+    idx, _ = assert_equivalent(g, 2, backends=NUMPY_MODES)
+    assert idx.is_condensed()
+
+
+def test_edge_cases():
+    # edgeless graph and single-vertex self loops
+    g0 = __import__("repro.core.graph", fromlist=["LabeledGraph"]
+                    ).LabeledGraph.from_edges(3, 2, np.zeros((0, 3)))
+    assert_equivalent(g0, 2, backends=NUMPY_MODES)
+    g1 = __import__("repro.core.graph", fromlist=["LabeledGraph"]
+                    ).LabeledGraph.from_edges(
+        1, 2, np.array([[0, 0, 0], [0, 1, 0]]))
+    idx, _ = assert_equivalent(g1, 2, backends=NUMPY_MODES)
+    assert idx.query(0, 0, (0, 1))
+
+
+# ------------------------------------------------------------------ #
+# Pallas backend (interpret mode on CPU — keep the graphs tiny)
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("seed", [0, 1])
+def test_pallas_matches_python(seed):
+    pytest.importorskip("jax")
+    g = random_labeled_graph(num_vertices=9, num_edges=24, num_labels=2,
+                             seed=seed, self_loop_frac=0.2)
+    assert_equivalent(g, 2, backends=[
+        ("pallas", dict(mode="vector", interpret=True))])
+
+
+# ------------------------------------------------------------------ #
+# Counter invariants
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("backend", ["python", "numpy"])
+def test_counter_invariants(backend):
+    g = random_labeled_graph(num_vertices=16, num_edges=60, num_labels=3,
+                             seed=11, self_loop_frac=0.1)
+    idx, st = build_rlc_index_with_stats(g, 2, backend=backend)
+    # PR3 can cut at most one subtree per discovered kernel-BFS state
+    assert st.pr3_cuts <= st.kernel_bfs_states
+    # with full pruning every successful insert is a distinct new entry
+    assert st.inserted == idx.num_entries()
+    # every pruned/successful attempt was a discovered state
+    attempts = st.inserted + st.pruned_pr1 + st.pruned_pr2
+    assert attempts <= st.kernel_search_states + st.kernel_bfs_states
+    assert st.backend == backend
+    assert st.wall_time_s > 0
+
+
+def test_registry_and_auto():
+    assert set(list_backends()) >= {"python", "numpy", "pallas"}
+    assert get_backend("auto").name == "numpy"
+    with pytest.raises(ValueError):
+        get_backend("no-such-backend")
+    with pytest.raises(ValueError):
+        get_backend("numpy", mode="warp-drive")
+
+
+# ------------------------------------------------------------------ #
+# Serving integration: BuildStats in stats(), hot-swap backend
+# ------------------------------------------------------------------ #
+def test_service_stats_build_block():
+    from repro.service import RLCService, ServiceConfig
+    g = erdos_renyi(60, 3.0, 3, seed=5)
+    svc = RLCService.build(g, ServiceConfig(k=2, build_backend="numpy",
+                                            use_device=False))
+    blk = svc.stats()["build"]
+    assert blk["backend"] == "numpy"
+    assert blk["inserted"] == svc.index.num_entries()
+    assert blk["wall_time_s"] > 0
+    # adopted index -> no build stats
+    svc2 = RLCService.build(g, ServiceConfig(k=2, use_device=False),
+                            index=svc.index)
+    assert svc2.stats()["build"] is None
+
+
+def test_sharded_hot_swap_uses_batched_backend():
+    from repro.service.sharded import ShardedRLCService, ShardedServiceConfig
+    g = erdos_renyi(80, 3.0, 3, seed=9)
+    svc = ShardedRLCService.build(
+        g, ShardedServiceConfig(k=2, num_shards=2, build_backend="numpy",
+                                use_device=False))
+    assert svc.stats()["build"]["backend"] == "numpy"
+    g2 = erdos_renyi(80, 3.2, 3, seed=10)
+    gen = svc.hot_swap(graph=g2)
+    assert gen == 1
+    assert svc.stats()["build"]["backend"] == "numpy"
+    assert all(sh["build_backend"] == "numpy"
+               for sh in svc.stats()["shards"])
+    # answers after the swap match a fresh python-reference build
+    ref = build_rlc_index(g2, 2, backend="python")
+    rng = np.random.default_rng(0)
+    queries = [(int(rng.integers(80)), int(rng.integers(80)), mr)
+               for mr in enumerate_mrs(3, 2) for _ in range(4)]
+    got = svc.query_batch([(s, t, mr) for s, t, mr in queries])
+    want = [ref.query(s, t, mr) for s, t, mr in queries]
+    assert got == want
+    # explicit override is honored
+    svc.hot_swap(graph=g2, build_backend="python")
+    assert svc.stats()["build"]["backend"] == "python"

@@ -154,3 +154,79 @@ def test_dense_engine_with_pallas_matmul():
     for u in range(10):
         for v in range(10):
             assert eng.s_k(u, v) == etc.s_k(u, v)
+
+
+# ------------------------------------------------------------------ #
+# label_frontier: multi-label / multi-step batching
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("R,V,L", [(6, 128, 3), (9, 256, 4)])
+def test_frontier_step_many_matches_per_row(R, V, L):
+    from repro.kernels.label_frontier import frontier_step_many
+
+    rng = np.random.default_rng(R + V + L)
+    f = rand_bool(rng, (R, V), density=0.08)
+    A = rand_bool(rng, (L, V, V), density=0.04)
+    labels = rng.integers(0, L, R).astype(np.int32)
+    got = frontier_step_many(jnp.asarray(f), jnp.asarray(A),
+                             jnp.asarray(labels), interpret=True)
+    want = np.stack([(f[r] @ A[labels[r]]) > 0 for r in range(R)])
+    np.testing.assert_array_equal(np.asarray(got),
+                                  want.astype(np.float32))
+
+
+def test_frontier_steps_matches_chained_many():
+    from repro.kernels.label_frontier import frontier_steps
+
+    rng = np.random.default_rng(42)
+    R, V, L, T = 5, 128, 3, 4
+    f = rand_bool(rng, (R, V), density=0.08)
+    A = rand_bool(rng, (L, V, V), density=0.04)
+    labels = rng.integers(0, L, (T, R)).astype(np.int32)
+    dst = np.stack([rng.permutation(R) for _ in range(T)]).astype(np.int32)
+    got = frontier_steps(jnp.asarray(f), jnp.asarray(A),
+                         jnp.asarray(labels), jnp.asarray(dst),
+                         interpret=True)
+    ref_f = f.copy()
+    for t in range(T):
+        step = np.stack([(ref_f[r] @ A[labels[t, r]]) > 0
+                         for r in range(R)]).astype(np.float32)
+        out = np.zeros_like(step)
+        out[dst[t]] = step
+        ref_f = out
+    np.testing.assert_array_equal(np.asarray(got), ref_f)
+
+
+def test_frontier_steps_advances_product_automaton():
+    """frontier_steps with the cyclic phase shift == m scalar BFS waves
+    of the kernel-BFS (no pruning) on a real graph."""
+    from repro.graphgen import random_labeled_graph
+    from repro.kernels.label_frontier import frontier_steps
+
+    g = random_labeled_graph(num_vertices=20, num_edges=70, num_labels=2,
+                             seed=1)
+    V, Vp = g.num_vertices, 128
+    A = np.zeros((2, Vp, Vp), np.float32)
+    e = g.edges
+    A[e[:, 1], e[:, 0], e[:, 2]] = 1
+    Lseq = (0, 1)
+    m = len(Lseq)
+    # rows = phases; row p follows label L[p], result lands at (p+1) % m
+    labels = np.tile([Lseq[p] for p in range(m)], (m, 1)).astype(np.int32)
+    dst = np.tile((np.arange(m) + 1) % m, (m, 1)).astype(np.int32)
+    F = np.zeros((m, Vp), np.float32)
+    F[0, 3] = 1  # seed vertex 3 at phase 0
+    got = np.asarray(frontier_steps(jnp.asarray(F), jnp.asarray(A),
+                                    jnp.asarray(labels), jnp.asarray(dst),
+                                    interpret=True))
+    # scalar oracle: m unpruned product-automaton waves
+    cur = {(3, 0)}
+    for _ in range(m):
+        nxt = set()
+        for (x, p) in cur:
+            for y in g.out_neighbors_with_label(x, Lseq[p]).tolist():
+                nxt.add((y, (p + 1) % m))
+        cur = nxt
+    want = np.zeros((m, Vp), np.float32)
+    for (y, p) in cur:
+        want[p, y] = 1
+    np.testing.assert_array_equal(got, want)

@@ -6,8 +6,6 @@ from __future__ import annotations
 import time
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 
 from repro.core.dense import DenseEngine, build_condensed_device
 from repro.core.device_index import DeviceIndex
@@ -18,9 +16,9 @@ from repro.graphgen import erdos_renyi
 from .common import Report, timeit
 
 
-def run(quick: bool = True, k: int = 2) -> Report:
+def run(quick: bool = True, smoke: bool = False, k: int = 2) -> Report:
     rep = Report("device_engine")
-    n = 256 if quick else 1024
+    n = 96 if smoke else (256 if quick else 1024)
     g = erdos_renyi(n, 4, 8, seed=21)
 
     t0 = time.perf_counter()

@@ -11,12 +11,14 @@ from repro.graphgen import barabasi_albert, erdos_renyi
 from .common import Report, timeit
 
 
-def run(quick: bool = True, k: int = 2) -> Report:
+def run(quick: bool = True, smoke: bool = False, k: int = 2) -> Report:
     rep = Report("graph_chars.fig5")
     n = 400 if quick else 2000
     degrees = (2, 4) if quick else (2, 3, 4, 5)
     labels = (8, 16) if quick else (8, 12, 16, 20, 24, 28, 32, 36)
     n_q = 100 if quick else 1000
+    if smoke:
+        n, degrees, labels, n_q = 120, (2,), (8,), 40
     for fam, gen in (("ER", erdos_renyi),
                      ("BA", lambda v, d, l, seed=0: barabasi_albert(
                          v, max(1, int(d / 2)), l, seed))):

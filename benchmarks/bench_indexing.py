@@ -32,10 +32,12 @@ def _quick_names(quick: bool):
     return names[:3] if quick else names
 
 
-def run(quick: bool = True, k: int = 2) -> Report:
+def run(quick: bool = True, smoke: bool = False, k: int = 2) -> Report:
     rep = Report("indexing.tableIV")
-    for name in _quick_names(quick):
-        g = standin_graph(name)
+    names = ["AD", "TW"] if smoke else _quick_names(quick)
+    scale = 0.3 if smoke else 1.0
+    for name in names:
+        g = standin_graph(name, scale=scale)
         t0 = time.perf_counter()
         idx, stats = build_rlc_index_with_stats(g, k, backend="python")
         rlc_it = time.perf_counter() - t0
@@ -58,10 +60,10 @@ def run(quick: bool = True, k: int = 2) -> Report:
     return rep
 
 
-def run_pruning_ablation(k: int = 2) -> Report:
+def run_pruning_ablation(smoke: bool = False, k: int = 2) -> Report:
     """Paper's pruning-impact observation: build with/without PR rules."""
     rep = Report("indexing.pruning")
-    g = standin_graph("AD")
+    g = standin_graph("AD", scale=0.3 if smoke else 1.0)
     for flags, label in [
             (dict(), "pr123"),
             (dict(use_pr1=False), "no-pr1"),
@@ -88,8 +90,8 @@ def _pallas_on_device() -> bool:
         return False
 
 
-def run_backends(quick: bool = True, k: int = 2, scale: float = 1.0,
-                 repeats: int = 2) -> Report:
+def run_backends(quick: bool = True, smoke: bool = False, k: int = 2,
+                 scale: float = 1.0, repeats: int = 2) -> Report:
     """Per-backend build times on the stand-ins + equality check.
 
     Emits ``artifacts/indexing.json`` with per-graph rows, per-backend
@@ -97,6 +99,9 @@ def run_backends(quick: bool = True, k: int = 2, scale: float = 1.0,
     acceptance headline).
     """
     rep = Report("indexing.backends")
+    if smoke:
+        scale = min(scale, 0.3)
+        repeats = 1
     backends = ["python", "numpy"]
     if _pallas_on_device():
         backends.append("pallas")

@@ -11,13 +11,16 @@ from repro.core.queries import generate_queries
 from .common import Report, standin_graph, timeit
 
 
-def run(quick: bool = True) -> Report:
+def run(quick: bool = True, smoke: bool = False) -> Report:
     rep = Report("k_sweep.fig4")
     names = ["TW"] if quick else ["TW", "WG"]
     ks = (2, 3) if quick else (2, 3, 4)
     n_q = 100 if quick else 1000
+    scale = 1.0
+    if smoke:
+        ks, n_q, scale = (2,), 40, 0.4
     for name in names:
-        g = standin_graph(name)
+        g = standin_graph(name, scale=scale)
         for k in ks:
             t0 = time.perf_counter()
             idx = build_rlc_index(g, k)

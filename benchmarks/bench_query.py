@@ -4,7 +4,6 @@ BFS / BiBFS traversals vs ETC lookups.
 """
 from __future__ import annotations
 
-import time
 
 import numpy as np
 
@@ -16,12 +15,15 @@ from repro.core.queries import generate_queries
 from .common import Report, standin_graph, timeit
 
 
-def run(quick: bool = True, k: int = 2) -> Report:
+def run(quick: bool = True, smoke: bool = False, k: int = 2) -> Report:
     rep = Report("query.fig3")
     names = ["AD", "EP"] if quick else ["AD", "EP", "TW", "WN", "WG"]
     n_q = 200 if quick else 1000
+    scale = 1.0
+    if smoke:
+        names, n_q, scale = ["AD"], 40, 0.3
     for name in names:
-        g = standin_graph(name)
+        g = standin_graph(name, scale=scale)
         qs = generate_queries(g, k, n_true=n_q, n_false=n_q, seed=1)
         idx = build_rlc_index(g, k)
         dev = DeviceIndex.from_index(idx, g.num_labels)

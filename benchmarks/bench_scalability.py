@@ -10,10 +10,12 @@ from repro.graphgen import barabasi_albert, erdos_renyi
 from .common import Report, timeit
 
 
-def run(quick: bool = True, k: int = 2) -> Report:
+def run(quick: bool = True, smoke: bool = False, k: int = 2) -> Report:
     rep = Report("scalability.fig6")
     sizes = (125, 250, 500) if quick else (125, 250, 500, 1000, 2000)
     n_q = 100 if quick else 1000
+    if smoke:
+        sizes, n_q = (125,), 40
     for fam, gen in (("ER", lambda v: erdos_renyi(v, 5, 16, seed=11)),
                      ("BA", lambda v: barabasi_albert(v, 2, 16, seed=11))):
         for v in sizes:

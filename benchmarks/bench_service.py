@@ -40,11 +40,13 @@ def _warmup(svc: RLCService, backend: str) -> None:
     svc.executor.recorders = {b: LatencyRecorder(b) for b in BACKENDS}
 
 
-def run(quick: bool = True, k: int = 2) -> Report:
+def run(quick: bool = True, smoke: bool = False, k: int = 2) -> Report:
     rep = Report("service")
     n = 300 if quick else 2000
     n_pool = 200 if quick else 1000
     n_requests = 2000 if quick else 20000
+    if smoke:
+        n, n_pool, n_requests = 120, 60, 300
     g = erdos_renyi(n, 3.5, 4, seed=31)
 
     t0 = time.perf_counter()

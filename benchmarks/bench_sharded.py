@@ -30,13 +30,16 @@ from .common import Report, run_query_stream, zipf_weights
 ART = os.path.join(os.path.dirname(__file__), "artifacts")
 
 
-def run(quick: bool = True, k: int = 2) -> Report:
+def run(quick: bool = True, smoke: bool = False, k: int = 2) -> Report:
     rep = Report("sharded")
     n = 400 if quick else 4000
     n_pool = 240 if quick else 1200
     n_requests = 3000 if quick else 30000
     shard_counts = (1, 2, 4, 8)
     num_replicas = 2
+    if smoke:
+        n, n_pool, n_requests = 160, 60, 300
+        shard_counts, num_replicas = (1, 2), 1
     g = erdos_renyi(n, 3.5, 4, seed=31)
 
     t0 = time.perf_counter()

@@ -15,14 +15,15 @@ import numpy as np
 
 from repro.core.baselines import NFA, bfs_nfa, rlc_index_plus_traversal
 from repro.core.index_builder import build_rlc_index
-from repro.core.queries import generate_queries
 
 from .common import Report, standin_graph, timeit
 
 
-def run(quick: bool = True) -> Report:
+def run(quick: bool = True, smoke: bool = False) -> Report:
     rep = Report("systems.tableV")
-    g = standin_graph("WN")          # paper's representative graph
+    # paper's representative graph (k=3 builds get expensive fast: smoke
+    # shrinks the stand-in, not the query set shape)
+    g = standin_graph("WN", scale=0.25 if smoke else 1.0)
     k = 3
     t0 = time.perf_counter()
     idx = build_rlc_index(g, k)
@@ -33,7 +34,7 @@ def run(quick: bool = True) -> Report:
 
     labels = np.unique(g.edges[:, 1])[:3].tolist()
     a, b, c = (labels + [0, 0])[:3]
-    n_pairs = 50 if quick else 200
+    n_pairs = 15 if smoke else (50 if quick else 200)
     rng = np.random.default_rng(4)
     pairs = [(int(rng.integers(g.num_vertices)),
               int(rng.integers(g.num_vertices))) for _ in range(n_pairs)]

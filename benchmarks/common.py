@@ -9,11 +9,9 @@ from __future__ import annotations
 
 import csv
 import io
-import sys
 import time
 import zlib
-from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List
 
 import numpy as np
 

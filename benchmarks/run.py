@@ -1,9 +1,15 @@
 """Benchmark orchestrator — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--smoke] [--only NAME]
+
+(also runnable as ``python benchmarks/run.py``: the shim below puts the
+repo root and ``src/`` on ``sys.path`` — what the CI smoke job invokes.)
 
 Default is quick mode (scaled-down graphs, single-core container);
-``--full`` runs paper-scale sweeps. CSVs land in benchmarks/artifacts/.
+``--full`` runs paper-scale sweeps; ``--smoke`` runs every registered
+suite at tiny sizes — it exists to fail on crash and keep per-PR JSON
+artifacts flowing, not to produce meaningful numbers. CSVs (and the
+JSON artifacts some suites emit) land in benchmarks/artifacts/.
 """
 from __future__ import annotations
 
@@ -12,33 +18,47 @@ import os
 import sys
 import time
 
-ART = os.path.join(os.path.dirname(__file__), "artifacts")
+if __package__ in (None, ""):                     # script execution
+    _HERE = os.path.dirname(os.path.abspath(__file__))
+    _ROOT = os.path.dirname(_HERE)
+    for p in (_ROOT, os.path.join(_ROOT, "src")):
+        if p not in sys.path:
+            sys.path.insert(0, p)
+    __package__ = "benchmarks"
+
+ART = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes, every suite; fails on crash")
     ap.add_argument("--only", type=str, default=None)
     args = ap.parse_args(argv)
+    if args.full and args.smoke:
+        ap.error("--full and --smoke are mutually exclusive")
     quick = not args.full
+    smoke = args.smoke
     os.makedirs(ART, exist_ok=True)
 
-    from . import (bench_device, bench_graph_chars, bench_indexing,
-                   bench_k, bench_query, bench_scalability, bench_service,
-                   bench_sharded, bench_systems)
+    from . import (bench_delta, bench_device, bench_graph_chars,
+                   bench_indexing, bench_k, bench_query, bench_scalability,
+                   bench_service, bench_sharded, bench_systems)
 
     suites = {
-        "indexing": lambda: bench_indexing.run(quick),
-        "build_backends": lambda: bench_indexing.run_backends(quick),
-        "pruning": lambda: bench_indexing.run_pruning_ablation(),
-        "query": lambda: bench_query.run(quick),
-        "k": lambda: bench_k.run(quick),
-        "graph_chars": lambda: bench_graph_chars.run(quick),
-        "scalability": lambda: bench_scalability.run(quick),
-        "systems": lambda: bench_systems.run(quick),
-        "device": lambda: bench_device.run(quick),
-        "service": lambda: bench_service.run(quick),
-        "sharded": lambda: bench_sharded.run(quick),
+        "indexing": lambda: bench_indexing.run(quick, smoke),
+        "build_backends": lambda: bench_indexing.run_backends(quick, smoke),
+        "pruning": lambda: bench_indexing.run_pruning_ablation(smoke),
+        "delta": lambda: bench_delta.run(quick, smoke),
+        "query": lambda: bench_query.run(quick, smoke),
+        "k": lambda: bench_k.run(quick, smoke),
+        "graph_chars": lambda: bench_graph_chars.run(quick, smoke),
+        "scalability": lambda: bench_scalability.run(quick, smoke),
+        "systems": lambda: bench_systems.run(quick, smoke),
+        "device": lambda: bench_device.run(quick, smoke),
+        "service": lambda: bench_service.run(quick, smoke),
+        "sharded": lambda: bench_sharded.run(quick, smoke),
     }
     failures = []
     for name, fn in suites.items():

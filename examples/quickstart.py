@@ -3,7 +3,6 @@ the Example 4 queries.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
 
 from repro.core.index_builder import build_rlc_index_with_stats
 from repro.core.baselines import bfs_rlc

@@ -10,7 +10,6 @@ import argparse
 import os
 import tempfile
 
-import jax
 
 from repro.configs.base import ArchConfig, dense_pattern, register
 from repro.launch.train import run

@@ -36,11 +36,15 @@ try:  # jax is optional at import time; the registry entry follows it
 except Exception:  # pragma: no cover - environments without jax
     PallasBackend = None
 
+# the incremental engine rides on the registered batched backends
+from .delta import DeltaBuilder, DeltaResult, GraphDelta
+
 __all__ = [
-    "AUTO_ORDER", "BuildBackend", "BuildStats", "IndexBuilder",
-    "NumpyBackend", "PallasBackend", "PrunedInserter", "PythonBackend",
-    "access_schedule", "build_rlc_index", "build_rlc_index_with_stats",
-    "get_backend", "list_backends", "register_backend",
+    "AUTO_ORDER", "BuildBackend", "BuildStats", "DeltaBuilder",
+    "DeltaResult", "GraphDelta", "IndexBuilder", "NumpyBackend",
+    "PallasBackend", "PrunedInserter", "PythonBackend", "access_schedule",
+    "build_rlc_index", "build_rlc_index_with_stats", "get_backend",
+    "list_backends", "register_backend",
 ]
 
 

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, fields
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Tuple
 
 import numpy as np
 
@@ -61,6 +61,53 @@ def access_schedule(graph: LabeledGraph) -> Tuple[np.ndarray, np.ndarray]:
     """Stage 1: the IN-OUT access order and the 1-based access ids
     (``aid[order[i]] == i + 1``); PR2 compares these ids."""
     return graph.access_order(), graph.access_ids()
+
+
+def vertex_mask(ys, num_vertices: int) -> int:
+    """Vertex ids -> packed little-endian bitmask (a python int, the same
+    representation the bits build tier and the delta engine use)."""
+    if not len(ys):
+        return 0
+    row = np.zeros(num_vertices, np.uint8)
+    row[np.asarray(ys)] = 1
+    return int.from_bytes(
+        np.packbits(row, bitorder="little").tobytes(), "little")
+
+
+def mask_vertices(mask: int):
+    """Iterate the set vertex ids of a packed mask (ascending)."""
+    while mask:
+        b = mask & -mask
+        yield b.bit_length() - 1
+        mask ^= b
+
+
+class PhaseProbe:
+    """Traversal-footprint recorder for one ``(hub, direction)`` phase.
+
+    Filled by the stage 2-3 implementations (all tiers record the same
+    sets, so a trace is tier-independent) and consumed by the delta
+    engine's affected-hub analysis:
+
+    * ``visited`` — every vertex holding a discovered state (superset of
+      the vertices whose entries the phase attempts / whose rows PR1
+      reads);
+    * ``near`` — vertices whose states expand with *full label fanout*
+      (kernel-search states at depth < k, plus the hub itself): any edge
+      mutation at these tails changes the traversal;
+    * ``lab[l]`` — vertices whose states expand *along label l only*
+      (kernel-BFS product states): an edge mutation with label ``l`` at
+      these tails changes the traversal, other labels cannot.
+
+    All masks are packed python-int bitsets over the vertex space.
+    """
+
+    __slots__ = ("visited", "near", "lab")
+
+    def __init__(self, num_labels: int):
+        self.visited = 0
+        self.near = 0
+        self.lab = [0] * num_labels
 
 
 class PrunedInserter:

@@ -48,7 +48,8 @@ from repro.core.graph import LabeledGraph
 from repro.core.minimum_repeat import LabelSeq, minimum_repeat, mr_id_space
 from repro.core.rlc_index import RLCIndex
 
-from .base import BuildBackend, BuildStats, PrunedInserter, access_schedule
+from .base import (BuildBackend, BuildStats, PrunedInserter, access_schedule,
+                   vertex_mask)
 from .reference import (_MemoMR, _NeighborLists, kernel_bfs_scalar,
                         kernel_search_scalar)
 
@@ -186,7 +187,7 @@ class _PhaseContext:
             self._cov_has[c] = True
 
     # ------------------------------------------------------------------ #
-    def run_phase(self, v: int, backward: bool) -> None:
+    def run_phase(self, v: int, backward: bool, probe=None) -> None:
         pr2pass = (self.aid >= self.aid[v]) if self.use_pr2 else None
         cov_packed = (self.index.pr1_cover_all(v, backward)
                       if self.use_pr1 else None)
@@ -194,11 +195,11 @@ class _PhaseContext:
         seeds_c: List[np.ndarray] = []
         seeds_y: List[np.ndarray] = []
         self._kernel_search(v, backward, pr2pass, cov_packed, touched,
-                            seeds_c, seeds_y)
+                            seeds_c, seeds_y, probe)
         if seeds_c:
             self._kernel_bfs(v, backward, pr2pass, cov_packed, touched,
                              np.concatenate(seeds_c),
-                             np.concatenate(seeds_y))
+                             np.concatenate(seeds_y), probe)
         # reset the reusable buffers (only rows this phase touched)
         if touched:
             cs = np.unique(np.concatenate(touched))
@@ -211,11 +212,14 @@ class _PhaseContext:
                        cov_packed: Optional[np.ndarray],
                        touched: List[np.ndarray],
                        seeds_c: List[np.ndarray],
-                       seeds_y: List[np.ndarray]) -> None:
+                       seeds_y: List[np.ndarray], probe=None) -> None:
         nl, V, st = self.nl, self.V, self.stats
         nb, lb = self.g.in_edges(v) if backward else self.g.out_edges(v)
         rows = lb.astype(np.int64)          # depth-1 row id == label
         ys = nb.astype(np.int64)            # edges are unique: no dedup
+        if probe is not None:
+            probe.visited |= 1 << v
+            probe.near |= 1 << v
         for depth in range(1, self.k + 1):
             if depth > 1:
                 raw_r, raw_y = self.engine.expand_fanout(rows, ys, backward)
@@ -223,6 +227,11 @@ class _PhaseContext:
                     return
                 pairs = np.unique(raw_r * V + raw_y)
                 rows, ys = pairs // V, pairs % V
+            if probe is not None:
+                m = vertex_mask(ys, V)
+                probe.visited |= m
+                if depth < self.k:
+                    probe.near |= m
             st.kernel_search_states += len(rows)
             urows, inv = np.unique(rows, return_inverse=True)
             cs = self._c_of_rowids(urows, depth, backward)[inv]
@@ -270,7 +279,8 @@ class _PhaseContext:
                     pr2pass: Optional[np.ndarray],
                     cov_packed: Optional[np.ndarray],
                     touched: List[np.ndarray],
-                    seed_c: np.ndarray, seed_y: np.ndarray) -> None:
+                    seed_c: np.ndarray, seed_y: np.ndarray,
+                    probe=None) -> None:
         V, st = self.V, self.stats
         rowlab, dstrow, c_of_row, is_p0, p0_of_c, R = self._layout[backward]
         pairs = np.unique(seed_c * V + seed_y)   # cross-depth seeds collapse
@@ -281,6 +291,10 @@ class _PhaseContext:
         VIS[fr, fy] = True
         use_pr3 = self.use_pr3
         while fr.size:
+            if probe is not None:
+                labs = rowlab[fr]
+                for lv in np.unique(labs).tolist():
+                    probe.lab[lv] |= vertex_mask(fy[labs == lv], V)
             raw_r, raw_y = self.engine.expand(fr, fy, rowlab, dstrow,
                                               backward)
             if not raw_r.size:
@@ -291,6 +305,8 @@ class _PhaseContext:
             nr, ny = nr[new], ny[new]
             if not nr.size:
                 return
+            if probe is not None:
+                probe.visited |= vertex_mask(ny, V)
             st.kernel_bfs_states += len(nr)
             VIS[nr, ny] = True
             p0 = is_p0[nr]
@@ -362,7 +378,7 @@ class _PhaseContext:
                                                  "little"))
         return self._pr2_cache[1]
 
-    def run_phase_bits(self, v: int, backward: bool) -> None:
+    def run_phase_bits(self, v: int, backward: bool, probe=None) -> None:
         by_label, by_vertex = self._adj_bits(backward)
         pr2 = self._pr2_bits(v) if self.use_pr2 else None
         mirror = self.index._mirror
@@ -379,24 +395,28 @@ class _PhaseContext:
         def covget(c: int) -> int:
             acc = cov_cache.get(c)
             if acc is None:
-                acc = int.from_bytes(side[c, v].tobytes(), "little")
+                acc = int.from_bytes(side[v, c].tobytes(), "little")
                 for x in cmap.get(c, ()):
-                    acc |= (int.from_bytes(side[c, x].tobytes(), "little")
+                    acc |= (int.from_bytes(side[x, c].tobytes(), "little")
                             | (1 << x))
                 cov_cache[c] = acc
             return acc
 
-        att = self._ks_bits(v, backward, pr2, covget, by_vertex)
+        att = self._ks_bits(v, backward, pr2, covget, by_vertex, probe)
         for c, seeds in att.items():
-            self._kbfs_bits(v, backward, pr2, covget, by_label, c, seeds)
+            self._kbfs_bits(v, backward, pr2, covget, by_label, c, seeds,
+                            probe)
 
     def _ks_bits(self, v: int, backward: bool, pr2: Optional[int], covget,
-                 by_vertex: list) -> Dict[int, int]:
+                 by_vertex: list, probe=None) -> Dict[int, int]:
         """Bits-tier kernel-search; returns the eager kernel seeds
         (``{mr id: attempted bitset}`` — exactly the reference's
         ``kernels`` map)."""
         st, nl = self.stats, self.nl
         att: Dict[int, int] = {}
+        if probe is not None:
+            probe.visited |= 1 << v
+            probe.near |= 1 << v
         # depth-1 rows are single labels: v's own adjacency fans out
         cur: Dict[int, int] = {l: b for l, b in by_vertex[v]}
         for depth in range(1, self.k + 1):
@@ -424,6 +444,10 @@ class _PhaseContext:
                    else self.index.add_in_many)
             for r, bits in cur.items():
                 st.kernel_search_states += bits.bit_count()
+                if probe is not None:
+                    probe.visited |= bits
+                    if depth < self.k:
+                        probe.near |= bits
                 c = self._c_of_rowid1(r, depth, backward)
                 if c < 0:
                     continue
@@ -455,7 +479,8 @@ class _PhaseContext:
         return att
 
     def _kbfs_bits(self, v: int, backward: bool, pr2: Optional[int],
-                   covget, by_label: list, c: int, seeds: int) -> None:
+                   covget, by_label: list, c: int, seeds: int,
+                   probe=None) -> None:
         """Bits-tier kernel-BFS for one kernel ``c`` from its seed set.
 
         The stage-4 logic is inlined into the wave loop (this runs once
@@ -464,19 +489,21 @@ class _PhaseContext:
         """
         st = self.stats
         key = (c, backward)
-        want = self._want_cache.get(key)
-        if want is None:
+        cached = self._want_cache.get(key)
+        if cached is None:
             L = self.mrs_by_c[c]
             m = len(L)
-            want = self._want_cache[key] = [
-                by_label[L[m - 1 - p] if backward else L[p]]
-                for p in range(m)]
+            lbls = [L[m - 1 - p] if backward else L[p] for p in range(m)]
+            cached = self._want_cache[key] = (
+                [by_label[lv] for lv in lbls], lbls)
+        want, lbls = cached
         m = len(want)
-        use_pr1, use_pr3 = self.use_pr1, self.use_pr3
         if m == 1:
             adjl = want[0]
             vis = fr = seeds
             while fr:
+                if probe is not None:
+                    probe.lab[lbls[0]] |= fr
                 acc = 0
                 while fr:
                     b = fr & -fr
@@ -486,6 +513,8 @@ class _PhaseContext:
                 if not new:
                     return
                 st.kernel_bfs_states += new.bit_count()
+                if probe is not None:
+                    probe.visited |= new
                 vis |= new
                 fr = self._p0_bits(new, c, v, backward, pr2, covget)
             return
@@ -499,6 +528,8 @@ class _PhaseContext:
                 f = fr[p]
                 if not f:
                     continue
+                if probe is not None:
+                    probe.lab[lbls[p]] |= f
                 adjl = want[p]
                 acc = 0
                 while f:
@@ -514,6 +545,8 @@ class _PhaseContext:
                     fr[p] = 0
                     continue
                 st.kernel_bfs_states += new.bit_count()
+                if probe is not None:
+                    probe.visited |= new
                 vis[p] |= new
                 if p == 0:
                     new = self._p0_bits(new, c, v, backward, pr2, covget)
@@ -574,6 +607,96 @@ class _PhaseContext:
             add(chunk_y.tolist(), v, self.mrs_by_c[int(chunk_c[0])])
 
 
+class PhaseRunner:
+    """One build's per-phase dispatch state: the hybrid tier selection,
+    the shared :class:`_PhaseContext`, and the scalar fallback.
+
+    Factored out of :meth:`BatchedBackend._build` so the delta engine
+    (:mod:`repro.build.delta`) can drive phases in its own schedule —
+    replaying most of them from a trace and running only the dirty ones —
+    while executing *exactly* the code path a full build would have used
+    (that shared path is what makes delta results bit-identical).
+    ``run`` accepts an optional :class:`repro.build.base.PhaseProbe` that
+    records the phase's traversal footprint.
+    """
+
+    def __init__(self, backend: "BatchedBackend", graph: LabeledGraph,
+                 k: int, index: RLCIndex, stats: BuildStats, mirror=None):
+        self.backend = backend
+        self.g = graph
+        self.k = int(k)
+        self.index = index
+        self.stats = stats
+        self.inserter = PrunedInserter(index, stats, backend.use_pr1,
+                                       backend.use_pr2)
+        V, nl = graph.num_vertices, graph.num_labels
+        words = (V + 7) // 8
+        C = len(mr_id_space(nl, k)) if nl else 0
+        self.can_batch = (backend.mode != "scalar" and V > 0 and nl > 0
+                          and 2 * C * V * words <= backend.mirror_budget)
+        self._nbrs = None      # scalar-tier accessor, built on first dispatch
+        self._mr_fn = _MemoMR()
+        self.out_deg, self.in_deg = graph.out_degree(), graph.in_degree()
+        #: True when a caller-provided mirror was adopted instead of a
+        #: fresh (empty) one — the delta engine hands back the previous
+        #: build's mirror, whose rows double as the old phase outputs.
+        self.adopted_mirror = False
+        if self.can_batch:
+            mr_ids = mr_id_space(nl, k)
+            if mirror is not None:
+                index._mirror = mirror
+                index._mr_ids = dict(mr_ids)
+                self.adopted_mirror = True
+            else:
+                index.attach_bit_mirror(mr_ids)
+            self.ctx = _PhaseContext(graph, k, index, stats,
+                                     backend._make_engine(graph), mr_ids,
+                                     backend.use_pr1, backend.use_pr2,
+                                     backend.use_pr3)
+            self._est = {
+                True: _two_hop_estimate(graph.bwd[0], graph.bwd[1],
+                                        self.in_deg),
+                False: _two_hop_estimate(graph.fwd[0], graph.fwd[1],
+                                         self.out_deg)}
+
+    def run(self, v: int, backward: bool, probe=None) -> None:
+        """Run one ``(hub, direction)`` phase (no-op on a degree-0 hub,
+        exactly like the full build's skip)."""
+        backend = self.backend
+        if not (self.in_deg[v] if backward else self.out_deg[v]):
+            return
+        if self.can_batch:
+            est = self._est[backward][v]
+            if backend.mode == "vector":
+                self.ctx.run_phase(v, backward, probe)
+                return
+            if backend.mode == "bits" or (
+                    backend.mode == "hybrid"
+                    and backend.scalar_threshold <= est
+                    < backend.gather_threshold):
+                self.ctx.run_phase_bits(v, backward, probe)
+                return
+            if (backend.mode == "hybrid"
+                    and est >= backend.gather_threshold):
+                self.ctx.run_phase(v, backward, probe)
+                return
+        if self._nbrs is None:
+            self._nbrs = _NeighborLists(self.g)
+        kernels = kernel_search_scalar(
+            self._nbrs, self.inserter, self.stats, self._mr_fn, v, self.k,
+            backward, probe)
+        for L, seeds in kernels.items():
+            kernel_bfs_scalar(self._nbrs, self.inserter, self.stats,
+                              backend.use_pr3, v, L, seeds, backward, probe)
+
+    def finish(self) -> RLCIndex:
+        """Detach the construction-time scratch (the coverage mirror is up
+        to ``mirror_budget`` bytes — never serve it)."""
+        self.index._mirror = None
+        self.index._mr_ids = None
+        return self.index
+
+
 class BatchedBackend(BuildBackend):
     """Template for wave-batched backends; subclasses provide the engine."""
 
@@ -602,52 +725,9 @@ class BatchedBackend(BuildBackend):
                ) -> RLCIndex:
         order, aid = access_schedule(graph)
         index = RLCIndex(graph.num_vertices, k, aid)
-        inserter = PrunedInserter(index, stats, self.use_pr1, self.use_pr2)
-        V, nl = graph.num_vertices, graph.num_labels
-        words = (V + 7) // 8
-        C = len(mr_id_space(nl, k)) if nl else 0
-        can_batch = (self.mode != "scalar" and V > 0 and nl > 0
-                     and 2 * C * V * words <= self.mirror_budget)
-        nbrs = None        # scalar-tier accessor, built on first dispatch
-        mr_fn = _MemoMR()
-        out_deg, in_deg = graph.out_degree(), graph.in_degree()
-        if can_batch:
-            mr_ids = mr_id_space(nl, k)
-            index.attach_bit_mirror(mr_ids)
-            ctx = _PhaseContext(graph, k, index, stats,
-                                self._make_engine(graph), mr_ids,
-                                self.use_pr1, self.use_pr2, self.use_pr3)
-            est_b = _two_hop_estimate(graph.bwd[0], graph.bwd[1], in_deg)
-            est_f = _two_hop_estimate(graph.fwd[0], graph.fwd[1], out_deg)
+        runner = PhaseRunner(self, graph, k, index, stats)
         for v in order:
             v = int(v)
             for backward in (True, False):
-                if not (in_deg[v] if backward else out_deg[v]):
-                    continue
-                if can_batch:
-                    est = (est_b if backward else est_f)[v]
-                    if self.mode == "vector":
-                        ctx.run_phase(v, backward)
-                        continue
-                    if self.mode == "bits" or (
-                            self.mode == "hybrid"
-                            and self.scalar_threshold <= est
-                            < self.gather_threshold):
-                        ctx.run_phase_bits(v, backward)
-                        continue
-                    if (self.mode == "hybrid"
-                            and est >= self.gather_threshold):
-                        ctx.run_phase(v, backward)
-                        continue
-                if nbrs is None:
-                    nbrs = _NeighborLists(graph)
-                kernels = kernel_search_scalar(
-                    nbrs, inserter, stats, mr_fn, v, k, backward)
-                for L, seeds in kernels.items():
-                    kernel_bfs_scalar(nbrs, inserter, stats,
-                                      self.use_pr3, v, L, seeds, backward)
-        # the coverage mirror is construction-time scratch (up to
-        # mirror_budget bytes) — never serve it
-        index._mirror = None
-        index._mr_ids = None
-        return index
+                runner.run(v, backward)
+        return runner.finish()

@@ -1,0 +1,29 @@
+"""Incremental (delta) index construction for mutable graphs.
+
+Public surface::
+
+    from repro.build.delta import DeltaBuilder, GraphDelta
+
+    db = DeltaBuilder(graph, k=2)            # backend="numpy" by default
+    index, stats = db.full()                 # traced full build
+    delta = GraphDelta.of(inserts=[(0, 1, 7)], deletes=[(3, 0, 4)])
+    res = db.apply(delta)                    # incremental re-derivation
+    db.index                                 # == full rebuild on db.graph
+
+``apply`` produces an index (and :class:`repro.build.BuildStats`
+counters) **bit-identical** to a from-scratch build of the mutated
+graph, re-running only the ``(hub, direction)`` phases the delta can
+touch and replaying every other phase from the previous build's trace.
+See ``src/repro/build/README.md`` ("Incremental delta builds") for the
+affected-hub analysis and the correctness argument; the property suite
+in ``tests/test_delta_build.py`` enforces the bit-identicality bar.
+"""
+from __future__ import annotations
+
+from repro.core.graph import GraphDelta
+
+from .engine import DeltaBuilder, DeltaResult
+from .trace import BuildTrace, PhaseTrace
+
+__all__ = ["BuildTrace", "DeltaBuilder", "DeltaResult", "GraphDelta",
+           "PhaseTrace"]

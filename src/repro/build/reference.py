@@ -81,15 +81,21 @@ class _MemoMR:
 
 def kernel_search_scalar(neighbors: NeighborFn, inserter: PrunedInserter,
                          stats: BuildStats, mr_fn, v: int, k: int,
-                         backward: bool) -> Dict[LabelSeq, Set[int]]:
+                         backward: bool, probe=None
+                         ) -> Dict[LabelSeq, Set[int]]:
     """Stage 2 (scalar): exhaustive BFS to depth ``k`` over (vertex, seq)
     states. Inserts entries for every state whose MR has length <= k (PR3
     does not apply here, paper §V-B) and returns the eager kernel
     candidates ``{L: frontier vertices whose path-so-far equals L^h}``.
+    ``probe`` (a :class:`repro.build.base.PhaseProbe`) records the
+    traversal footprint for the delta engine.
     """
     seen: Set[Tuple[int, LabelSeq]] = {(v, ())}
     frontier: deque = deque([(v, ())])
     kernels: Dict[LabelSeq, Set[int]] = {}
+    if probe is not None:
+        probe.visited |= 1 << v
+        probe.near |= 1 << v
     while frontier:
         x, seq = frontier.popleft()
         for y, lab in neighbors(x, backward):
@@ -99,6 +105,8 @@ def kernel_search_scalar(neighbors: NeighborFn, inserter: PrunedInserter,
                 continue
             seen.add(state)
             stats.kernel_search_states += 1
+            if probe is not None:
+                probe.visited |= 1 << y
             L = mr_fn(seq2)
             if len(L) <= k:
                 # |MR| <= k  =>  seq2 == L^h: a genuine entry AND an
@@ -107,20 +115,25 @@ def kernel_search_scalar(neighbors: NeighborFn, inserter: PrunedInserter,
                 kernels.setdefault(L, set()).add(y)
             if len(seq2) < k:
                 frontier.append((y, seq2))
+                if probe is not None:
+                    probe.near |= 1 << y
     return kernels
 
 
 def kernel_bfs_scalar(neighbors: NeighborFn, inserter: PrunedInserter,
                       stats: BuildStats, use_pr3: bool,
                       v: int, L: LabelSeq, seeds: Set[int],
-                      backward: bool) -> None:
+                      backward: bool, probe=None) -> None:
     """Stage 3 (scalar): product-automaton BFS guided by ``L^+``.
 
     State ``(y, p)``: ``p`` labels consumed since the last full-repeat
     boundary. Backward search prepends labels, so from state ``p`` the
     expected edge label is ``L[m-1-p]``; forward appends, expecting
     ``L[p]``. Stage-4 insertion fires when ``p`` wraps to 0; a pruned
-    insertion (PR1/PR2 fired) triggers the PR3 subtree cut.
+    insertion (PR1/PR2 fired) triggers the PR3 subtree cut. ``probe``
+    records expansion tails per label (PR3-cut states are never popped,
+    so they stay out of the label masks — exactly the states that do
+    not expand).
     """
     m = len(L)
     visited: Set[Tuple[int, int]] = {(x, 0) for x in seeds}
@@ -128,6 +141,8 @@ def kernel_bfs_scalar(neighbors: NeighborFn, inserter: PrunedInserter,
     while q:
         x, p = q.popleft()
         want = L[m - 1 - p] if backward else L[p]
+        if probe is not None:
+            probe.lab[want] |= 1 << x
         for y, lab in neighbors(x, backward):
             if lab != want:
                 continue
@@ -135,6 +150,8 @@ def kernel_bfs_scalar(neighbors: NeighborFn, inserter: PrunedInserter,
             if (y, p2) in visited:
                 continue
             stats.kernel_bfs_states += 1
+            if probe is not None:
+                probe.visited |= 1 << y
             if p2 == 0:
                 if not inserter.insert(y, v, L, backward):
                     if use_pr3:

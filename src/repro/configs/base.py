@@ -9,8 +9,8 @@ surfaced by the dry-run/roofline reports.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, Tuple
 
 import jax.numpy as jnp
 
@@ -197,5 +197,5 @@ def get_config(name: str) -> ArchConfig:
 
 
 def list_configs() -> Tuple[str, ...]:
-    import repro.configs
+    import repro.configs  # noqa: F401 — populates _REGISTRY
     return tuple(sorted(_REGISTRY))

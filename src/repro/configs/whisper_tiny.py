@@ -8,7 +8,7 @@ not divisible by the 16-way model axis, so attention params fall back to
 replication under the divisibility guard (sharding/partition.py) while
 FFN/vocab still shard.
 """
-from .base import ArchConfig, dense_pattern, register
+from .base import ArchConfig, register
 
 FULL = register(ArchConfig(
     name="whisper-tiny",

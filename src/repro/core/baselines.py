@@ -11,12 +11,11 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass
-from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+from typing import Dict, FrozenSet, List, Sequence, Set, Tuple
 
-import numpy as np
 
 from .graph import LabeledGraph
-from .minimum_repeat import LabelSeq, k_mr, minimum_repeat
+from .minimum_repeat import LabelSeq, minimum_repeat
 
 
 # --------------------------------------------------------------------- #

@@ -11,7 +11,6 @@ Row padding uses hub id ``-1`` (never matches a real hub / query vertex).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import math
 from functools import partial
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,9 +30,9 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from .dense import DenseEngine, bool_matmul, build_condensed_device
+from .dense import DenseEngine, build_condensed_device
 from .graph import LabeledGraph
-from .minimum_repeat import enumerate_mrs, mr_id_space
+from .minimum_repeat import enumerate_mrs
 from .rlc_index import RLCIndex
 
 # jax promoted shard_map out of jax.experimental across versions.

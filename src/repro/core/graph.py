@@ -8,9 +8,74 @@ engine (``core/dense.py``) on graphs where |V|^2 * |L| is affordable.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
+
+
+def _edge_keys(edges: np.ndarray, num_vertices: int, num_labels: int
+               ) -> np.ndarray:
+    """Collision-free int64 key per (src, label, dst) row."""
+    e = edges.astype(np.int64)
+    return (e[:, 0] * num_labels + e[:, 1]) * num_vertices + e[:, 2]
+
+
+@dataclass(frozen=True)
+class GraphDelta:
+    """A batch of edge mutations: ``inserts``/``deletes`` are (m, 3) int32
+    rows of ``(src, label, dst)``, deduplicated and disjoint.
+
+    The unit the incremental build engine (:mod:`repro.build.delta`)
+    consumes: :meth:`LabeledGraph.apply_delta` turns ``graph + delta``
+    into the mutated graph, and the delta builder re-derives only the
+    ``(hub, direction)`` phases the delta can touch.
+    """
+
+    inserts: np.ndarray
+    deletes: np.ndarray
+
+    @staticmethod
+    def of(inserts: Sequence = (), deletes: Sequence = ()) -> "GraphDelta":
+        def norm(rows):
+            a = np.asarray(rows, dtype=np.int32).reshape(-1, 3)
+            return np.unique(a, axis=0) if a.size else a
+        return GraphDelta(norm(inserts), norm(deletes))
+
+    @property
+    def num_changes(self) -> int:
+        return int(self.inserts.shape[0] + self.deletes.shape[0])
+
+    def endpoints(self) -> np.ndarray:
+        """Sorted unique vertex ids whose degree the delta changes."""
+        cols = [self.inserts[:, 0], self.inserts[:, 2],
+                self.deletes[:, 0], self.deletes[:, 2]]
+        return np.unique(np.concatenate(cols)).astype(np.int64)
+
+    def validate(self, graph: "LabeledGraph") -> None:
+        """Raise ``ValueError`` unless the delta is applicable to
+        ``graph``: ids in range, deletes present, inserts absent, and no
+        row both inserted and deleted."""
+        for name, rows in (("inserts", self.inserts),
+                           ("deletes", self.deletes)):
+            if not rows.size:
+                continue
+            if (rows[:, [0, 2]].min() < 0
+                    or rows[:, [0, 2]].max() >= graph.num_vertices):
+                raise ValueError(f"{name}: vertex id out of range "
+                                 f"[0, {graph.num_vertices})")
+            if rows[:, 1].min() < 0 or rows[:, 1].max() >= graph.num_labels:
+                raise ValueError(f"{name}: label id out of range "
+                                 f"[0, {graph.num_labels})")
+        V, L = graph.num_vertices, graph.num_labels
+        have = _edge_keys(graph.edges, V, L)
+        ins = _edge_keys(self.inserts, V, L)
+        dels = _edge_keys(self.deletes, V, L)
+        if np.isin(ins, have).any():
+            raise ValueError("inserts contain edges already in the graph")
+        if not np.isin(dels, have).all():
+            raise ValueError("deletes contain edges not in the graph")
+        if np.isin(ins, dels).any():
+            raise ValueError("an edge appears in both inserts and deletes")
 
 
 @dataclass
@@ -43,6 +108,22 @@ class LabeledGraph:
     @property
     def num_edges(self) -> int:
         return int(self.edges.shape[0])
+
+    def apply_delta(self, delta: GraphDelta,
+                    validate: bool = True) -> "LabeledGraph":
+        """The mutated graph ``(E \\ deletes) ∪ inserts`` as a fresh
+        :class:`LabeledGraph` (same vertex/label space; derived CSR caches
+        are rebuilt lazily on the new object — the receiver is untouched,
+        so index builds against the old snapshot stay valid)."""
+        if validate:
+            delta.validate(self)
+        keys = _edge_keys(self.edges, self.num_vertices, self.num_labels)
+        dels = _edge_keys(delta.deletes, self.num_vertices, self.num_labels)
+        kept = self.edges[~np.isin(keys, dels)]
+        edges = (np.concatenate([kept, delta.inserts.astype(np.int32)])
+                 if delta.inserts.size else kept)
+        return LabeledGraph.from_edges(self.num_vertices, self.num_labels,
+                                       edges)
 
     # ------------------------------------------------------------------ #
     def _build_csr(self, key_col: int, val_col: int

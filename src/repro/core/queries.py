@@ -8,7 +8,7 @@ Constraints L are drawn from the realizable minimum repeats of the graph
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 

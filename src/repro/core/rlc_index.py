@@ -34,36 +34,38 @@ _BIT = np.left_shift(np.uint8(1), np.arange(8, dtype=np.uint8))
 class BitMirror:
     """Bit-packed mirror of the entry sets, keyed per minimum repeat.
 
-    ``out[c, x]`` is a little-endian packed bitset over visited vertices
+    ``out[x, c]`` is a little-endian packed bitset over visited vertices
     ``y`` with bit ``y`` set iff ``(x, mr_c) in L_out(y)`` (``in_`` is the
     symmetric L_in mirror). One row is one hub's footprint for one MR, so
     Algorithm 2's PR1 coverage check for a whole frontier collapses to a
     handful of row ORs + a bit gather (:meth:`RLCIndex.pr1_cover_out`) —
     the numpy twin of the 32-wide TPU packing in
-    :mod:`repro.kernels.bitpack`.
+    :mod:`repro.kernels.bitpack`. The hub axis leads so a hub's whole
+    footprint (``side[hub]`` — what :meth:`RLCIndex.pr1_cover_all` and
+    the delta engine's output diff read) is one contiguous slice.
     """
 
     def __init__(self, num_mrs: int, num_vertices: int):
         self.num_vertices = num_vertices
         self.words = (num_vertices + 7) // 8
-        self.out = np.zeros((num_mrs, num_vertices, self.words), np.uint8)
-        self.in_ = np.zeros((num_mrs, num_vertices, self.words), np.uint8)
+        self.out = np.zeros((num_vertices, num_mrs, self.words), np.uint8)
+        self.in_ = np.zeros((num_vertices, num_mrs, self.words), np.uint8)
 
     def nbytes(self) -> int:
         return self.out.nbytes + self.in_.nbytes
 
     def set1(self, side: np.ndarray, c: int, hub: int, y: int) -> None:
-        side[c, hub, y >> 3] |= _BIT[y & 7]
+        side[hub, c, y >> 3] |= _BIT[y & 7]
 
     def set_many(self, side: np.ndarray, c: int, hub: int, ys) -> None:
         if len(ys) <= 16:                      # bulk update doesn't pay
-            row = side[c, hub]
+            row = side[hub, c]
             for y in ys:
                 row[y >> 3] |= _BIT[y & 7]
             return
         row = np.zeros(self.num_vertices, np.uint8)
         row[np.asarray(ys)] = 1
-        side[c, hub] |= np.packbits(row, bitorder="little")[:self.words]
+        side[hub, c] |= np.packbits(row, bitorder="little")[:self.words]
 
 
 def merge_join_rows(out_hub: np.ndarray, out_mr: np.ndarray,
@@ -221,10 +223,10 @@ class RLCIndex:
         Case-2 direct rows plus Case-1 through each hub of ``L_in(hub)``.
         """
         m, c = self._mirror, self._mr_ids[mr]
-        cov = m.out[c, hub].copy()               # (hub, mr) in L_out(y)
+        cov = m.out[hub, c].copy()               # (hub, mr) in L_out(y)
         for x, mrs in self.l_in[hub].items():
             if mr in mrs:
-                cov |= m.out[c, x]               # Case 1 via hub x
+                cov |= m.out[x, c]               # Case 1 via hub x
                 cov[x >> 3] |= _BIT[x & 7]       # (y, mr) in L_in(hub)
         return cov
 
@@ -232,10 +234,10 @@ class RLCIndex:
         """Symmetric to :meth:`pr1_cover_out`: packed ``Query(hub, y, mr^+)``
         over ``y`` — PR1 for the forward KBS of ``hub``."""
         m, c = self._mirror, self._mr_ids[mr]
-        cov = m.in_[c, hub].copy()
+        cov = m.in_[hub, c].copy()
         for x, mrs in self.l_out[hub].items():
             if mr in mrs:
-                cov |= m.in_[c, x]
+                cov |= m.in_[x, c]
                 cov[x >> 3] |= _BIT[x & 7]
         return cov
 
@@ -248,12 +250,12 @@ class RLCIndex:
         m = self._mirror
         side = m.out if backward else m.in_
         row_src = self.l_in[hub] if backward else self.l_out[hub]
-        cov = side[:, hub, :].copy()
+        cov = side[hub].copy()
         for x, mrs in row_src.items():
             xb, xbit = x >> 3, _BIT[x & 7]
             for mr in mrs:
                 c = self._mr_ids[mr]
-                cov[c] |= side[c, x]
+                cov[c] |= side[x, c]
                 cov[c, xb] |= xbit
         return cov
 
@@ -354,6 +356,64 @@ class FrozenRLCIndex:
         oi, oh, om = FrozenRLCIndex._flatten(idx.l_out, idx.aid, mr_ids)
         ii, ih, im = FrozenRLCIndex._flatten(idx.l_in, idx.aid, mr_ids)
         return FrozenRLCIndex(idx.num_vertices, idx.k, idx.aid,
+                              oi, oh, om, ii, ih, im)
+
+    @staticmethod
+    def _row_sorted(d: EntryMap, aid: np.ndarray,
+                    mr_ids: Dict[LabelSeq, int]):
+        rows = sorted(((int(aid[h]), mr_ids[m], h) for h, ms in d.items()
+                       for m in ms))
+        return (np.asarray([r[2] for r in rows], dtype=np.int32),
+                np.asarray([r[1] for r in rows], dtype=np.int32))
+
+    def patch_rows(self, index: RLCIndex, mr_ids: Dict[LabelSeq, int],
+                   dirty_out, dirty_in, aid=None) -> "FrozenRLCIndex":
+        """Re-freeze ``index`` reusing this frozen layout's clean rows.
+
+        ``dirty_out``/``dirty_in`` are the vertex sets (any container
+        supporting ``in``) whose entry rows may differ from this frozen
+        snapshot — rows whose entries changed, plus rows whose aid sort
+        order may have shifted (they hold a hub whose access rank moved).
+        Dirty rows are re-derived from ``index``'s dict layout; clean rows
+        are copied from this object's flat arrays, skipping the per-entry
+        python sort that dominates a full :meth:`RLCIndex.freeze`. The
+        result is bit-identical to ``index.freeze(mr_ids)`` provided the
+        dirty sets cover every changed/re-ordered row — the delta-build
+        property suite enforces exactly that.
+
+        ``aid``: the hub sort order of the result; defaults to
+        ``index.aid`` (the current access order). Algorithm 1 only needs
+        *one consistent* total order on both sides of the merge join, so
+        a caller that mixes patched and unpatched row ranges across hosts
+        (the sharded service) passes ``self.aid`` instead — the stable
+        order it froze with — and then rows whose entries did not change
+        never need re-freezing at all, whatever happened to access ranks.
+        """
+        aid = np.asarray(index.aid if aid is None else aid)
+
+        def patch(old_indptr, old_hub, old_mr, maps, dirty):
+            n = len(maps)
+            hubs, mrs = [], []
+            indptr = np.zeros(n + 1, dtype=np.int64)
+            for v in range(n):
+                if v in dirty:
+                    h, m = self._row_sorted(maps[v], aid, mr_ids)
+                else:
+                    lo, hi = old_indptr[v], old_indptr[v + 1]
+                    h, m = old_hub[lo:hi], old_mr[lo:hi]
+                indptr[v + 1] = indptr[v] + len(h)
+                hubs.append(h)
+                mrs.append(m)
+            cat = lambda parts: (np.concatenate(parts)  # noqa: E731
+                                 if parts else np.empty(0, np.int32))
+            return indptr, cat(hubs).astype(np.int32), \
+                cat(mrs).astype(np.int32)
+
+        oi, oh, om = patch(self.out_indptr, self.out_hub, self.out_mr,
+                           index.l_out, dirty_out)
+        ii, ih, im = patch(self.in_indptr, self.in_hub, self.in_mr,
+                           index.l_in, dirty_in)
+        return FrozenRLCIndex(index.num_vertices, index.k, aid,
                               oi, oh, om, ii, ih, im)
 
     def row_out(self, s: int) -> Tuple[np.ndarray, np.ndarray]:

@@ -12,7 +12,7 @@ so smoke-training shows a real loss curve (not instantly-memorized noise).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict
 
 import numpy as np
 

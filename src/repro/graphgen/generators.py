@@ -6,7 +6,7 @@ illustration graphs (Fig. 1 and Fig. 2) for examples and tests.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 
@@ -88,6 +88,35 @@ def random_labeled_graph(num_vertices: int, num_edges: int, num_labels: int,
     lab = rng.integers(0, num_labels, size=num_edges, dtype=np.int64)
     edges = np.stack([src, lab, dst], axis=1)
     return LabeledGraph.from_edges(num_vertices, num_labels, edges)
+
+
+def random_delta(graph: LabeledGraph, n_ins: int, n_del: int,
+                 rng: np.random.Generator, max_tries: int = 1000):
+    """A random :class:`repro.core.graph.GraphDelta` for ``graph``:
+    ``n_del`` uniformly drawn existing edges deleted plus up to
+    ``n_ins`` fresh (absent) edges inserted. The insert search is
+    bounded by ``max_tries`` rejection samples so a near-complete
+    (src, label, dst) space degrades to a smaller insert batch instead
+    of spinning — the shared workload generator for the delta tests,
+    benchmarks and examples."""
+    from repro.core.graph import GraphDelta
+    keys = set(map(tuple, graph.edges.tolist()))
+    n_del = min(n_del, graph.num_edges)
+    dels = [graph.edges[i].tolist()
+            for i in rng.choice(graph.num_edges, size=n_del,
+                                replace=False)] if n_del else []
+    ins: list = []
+    seen = set()
+    for _ in range(max_tries):
+        if len(ins) >= n_ins:
+            break
+        e = (int(rng.integers(graph.num_vertices)),
+             int(rng.integers(graph.num_labels)),
+             int(rng.integers(graph.num_vertices)))
+        if e not in keys and e not in seen:
+            seen.add(e)
+            ins.append(list(e))
+    return GraphDelta.of(ins, dels)
 
 
 # ------------------------------------------------------------------ #

@@ -10,7 +10,6 @@ Inputs are the padded DeviceIndex arrays (PAD = -1 never matches).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

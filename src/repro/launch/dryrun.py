@@ -21,7 +21,6 @@ import json
 import sys
 import time
 import traceback
-from functools import partial
 from typing import Dict, Optional
 
 import jax
@@ -94,7 +93,6 @@ def _decode_cache_specs(cfg, shape, mesh):
         kv = jax.eval_shape(lambda p, e: _enc_kv_tree(p, cfg, e),
                             params, enc_out)
         cache["enc_kv"] = kv
-        K = cfg.num_kv_heads
         cache_axes["enc_kv"] = jax.tree.map(
             lambda l: ("layers",) * (l.ndim - 4) +
             ("act_batch", None, "kv", None), kv,
@@ -239,7 +237,6 @@ def lower_cell(arch: str, shape_name: str, mesh, microbatches: int = 1,
 # ------------------------------------------------------------------ #
 def lower_rlc_cell(name: str, mesh) -> Dict:
     """Lower the RLC engine's two hot steps on the production mesh."""
-    from repro.core.dense import bool_matmul
     cell = RLC_CELLS[name]
     n_chips = int(np.prod(list(mesh.shape.values())))
     t0 = time.time()

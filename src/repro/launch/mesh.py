@@ -6,7 +6,6 @@ any jax import; everything else sees the real topology).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 

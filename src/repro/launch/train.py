@@ -11,13 +11,11 @@ example run lives in examples/train_lm.py.
 from __future__ import annotations
 
 import argparse
-import os
 import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.data import DataConfig, SyntheticLMData
@@ -25,7 +23,7 @@ from repro.ft import StragglerMonitor, resilient_loop
 from repro.launch.mesh import make_host_mesh, mesh_context
 from repro.sharding.partition import PARAM_RULES, tree_shardings
 from repro.train import OptConfig, make_train_step
-from repro.train.train_loop import init_train_state, train_state_axes
+from repro.train.train_loop import init_train_state
 
 
 def run(arch: str, steps: int, batch: int, seq: int,

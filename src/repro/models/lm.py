@@ -16,7 +16,6 @@ Block kinds:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -369,12 +368,11 @@ def prefill(params, cfg: ArchConfig, tokens: jax.Array, cache: PyTree,
     B, S = tokens.shape
     x = embed_tokens(params, tokens, cfg)
     enc_kv_tree = None
-    n_prefix = 0
     if cfg.encoder_layers:
         enc_out = _run_encoder(params, cfg, frontend.astype(x.dtype))
         enc_kv_tree = _enc_kv_tree(params, cfg, enc_out)
     else:
-        x, n_prefix = _fuse_frontend(params, cfg, x, frontend)
+        x, _ = _fuse_frontend(params, cfg, x, frontend)
     Sp = x.shape[1]
     positions = jnp.broadcast_to(jnp.arange(Sp)[None], (B, Sp))
     x, new_cache, _ = _run_stages(params, cfg, x, positions, cache, None,

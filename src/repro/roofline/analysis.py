@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 # TPU v5e-class hardware constants (assignment-specified)
 @dataclass(frozen=True)

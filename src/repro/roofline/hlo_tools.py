@@ -302,7 +302,6 @@ def scan_aware_totals(hlo_text: str) -> Dict[str, float]:
                   for c in _CONST_RE.findall(line)]
         return max(consts) if consts else 1
 
-    from functools import lru_cache
 
     def walk(name: str, count_bytes: bool):
         flops = 0.0

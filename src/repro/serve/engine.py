@@ -6,9 +6,7 @@ function the ``decode_*`` dry-run cells lower on the production mesh.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from functools import partial
-from typing import Dict, List, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

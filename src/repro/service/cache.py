@@ -2,15 +2,24 @@
 
 Keys are ``(s, t, mr_id)`` triples; values are booleans — *both* positive
 and negative answers are cached (a false reachability answer is exactly as
-expensive to recompute as a true one; the index is static between
-rebuilds, so negatives never go stale). Hit/miss/eviction counters feed
-the service stats and the Zipf-workload benchmark.
+expensive to recompute as a true one; the index is immutable between
+rebuilds/deltas, so staleness is driven by explicit invalidation, not
+time — but an optional TTL is available for deployments that prefer
+bounded staleness over precise invalidation). Hit/miss/eviction counters
+feed the service stats and the Zipf-workload benchmark.
+
+Graphs became mutable with the delta-build engine
+(:mod:`repro.build.delta`): a delta changes the answers of exactly the
+queries whose source row (``L_out(s)``) or target row (``L_in(t)``) went
+dirty, so :meth:`ResultCache.invalidate_rows` evicts only those keys and
+every other cached answer survives.
 """
 from __future__ import annotations
 
+import time
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 Key = Tuple[int, int, int]  # (s, t, mr_id)
 
@@ -20,6 +29,8 @@ class CacheStats:
     hits: int = 0
     misses: int = 0
     evictions: int = 0
+    expirations: int = 0
+    invalidations: int = 0
 
     @property
     def lookups(self) -> int:
@@ -31,30 +42,48 @@ class CacheStats:
 
     def as_dict(self) -> dict:
         return dict(hits=self.hits, misses=self.misses,
-                    evictions=self.evictions, hit_rate=self.hit_rate)
+                    evictions=self.evictions,
+                    expirations=self.expirations,
+                    invalidations=self.invalidations,
+                    hit_rate=self.hit_rate)
 
 
 class ResultCache:
-    """Bounded LRU mapping ``(s, t, mr_id) -> bool``."""
+    """Bounded LRU mapping ``(s, t, mr_id) -> bool``.
 
-    def __init__(self, capacity: int):
+    ``ttl_s``: optional time-to-live; an entry older than this counts as
+    a miss (and is evicted) on lookup. ``clock`` is injectable for
+    tests.
+    """
+
+    def __init__(self, capacity: int, ttl_s: Optional[float] = None,
+                 clock: Callable[[], float] = time.monotonic):
         if capacity < 0:
             raise ValueError(f"capacity must be >= 0, got {capacity}")
+        if ttl_s is not None and ttl_s <= 0:
+            raise ValueError(f"ttl_s must be > 0, got {ttl_s}")
         self.capacity = capacity
-        self._d: "OrderedDict[Key, bool]" = OrderedDict()
+        self.ttl_s = ttl_s
+        self.clock = clock
+        self._d: "OrderedDict[Key, Tuple[bool, float]]" = OrderedDict()
         self.stats = CacheStats()
 
     def __len__(self) -> int:
         return len(self._d)
 
     def get(self, key: Key) -> Optional[bool]:
-        """Answer if cached (refreshing recency), else ``None``."""
+        """Answer if cached and fresh (refreshing recency), else ``None``."""
         if self.capacity == 0:
             self.stats.misses += 1
             return None
         try:
-            val = self._d[key]
+            val, stamp = self._d[key]
         except KeyError:
+            self.stats.misses += 1
+            return None
+        if self.ttl_s is not None and self.clock() - stamp >= self.ttl_s:
+            del self._d[key]
+            self.stats.expirations += 1
             self.stats.misses += 1
             return None
         self._d.move_to_end(key)
@@ -66,10 +95,25 @@ class ResultCache:
             return
         if key in self._d:
             self._d.move_to_end(key)
-        self._d[key] = bool(value)
+        self._d[key] = (bool(value), self.clock())
         while len(self._d) > self.capacity:
             self._d.popitem(last=False)
             self.stats.evictions += 1
 
+    def invalidate_rows(self, dirty_s=None, dirty_t=None) -> int:
+        """Evict every key whose source row is in ``dirty_s`` or target
+        row is in ``dirty_t`` (containers supporting ``in``); returns the
+        eviction count. The targeted flavor of :meth:`clear` for delta
+        updates: untouched keys keep serving."""
+        dirty_s = dirty_s if dirty_s is not None else ()
+        dirty_t = dirty_t if dirty_t is not None else ()
+        doomed = [k for k in self._d
+                  if k[0] in dirty_s or k[1] in dirty_t]
+        for k in doomed:
+            del self._d[k]
+        self.stats.invalidations += len(doomed)
+        return len(doomed)
+
     def clear(self) -> None:
+        self.stats.invalidations += len(self._d)
         self._d.clear()

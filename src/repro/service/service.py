@@ -39,10 +39,14 @@ class ServiceConfig:
     batch_size: int = 32
     max_wait_ms: float = 2.0
     cache_capacity: int = 4096
+    cache_ttl_s: Optional[float] = None   # optional TTL on cached answers
     backend: str = "auto"           # "auto" | "pallas" | "sorted" | "numpy" | "python"
     build_backend: str = "auto"     # repro.build backend for (re)builds
     use_device: bool = True         # build the padded DeviceIndex layout
     label_names: Optional[Dict[str, int]] = None  # e.g. {"knows": 0, ...}
+    #: incremental-build budget for apply_delta (see DeltaBuilder);
+    #: 1.0 disables the full-rebuild fallback
+    delta_fallback_frac: float = 0.25
 
 
 class RLCService:
@@ -68,10 +72,14 @@ class RLCService:
         self.executor = BatchExecutor(
             index, self.frozen, self.device_index, self._id_to_mr,
             backend=config.backend)
-        self.cache = ResultCache(config.cache_capacity)
+        self.cache = ResultCache(config.cache_capacity,
+                                 ttl_s=config.cache_ttl_s)
         self.batcher = MicroBatcher(config.batch_size,
                                     config.max_wait_ms * 1e-3)
         self.queries_served = 0
+        self.deltas_applied = 0
+        self._delta = None          # lazy DeltaBuilder (apply_delta)
+        self._closed = False
 
     # ------------------------------------------------------------------ #
     @classmethod
@@ -165,6 +173,116 @@ class RLCService:
             for pos in slot.get(req.req_id, ()):
                 answers[pos] = val
 
+    # -- incremental graph mutation -------------------------------------- #
+    def _delta_backend_name(self) -> str:
+        b = self.config.build_backend
+        return b if b not in ("auto", "python") else "numpy"
+
+    def _make_device_index(self):
+        if not self.config.use_device:
+            return None
+        try:
+            from repro.core.device_index import DeviceIndex
+            return DeviceIndex.from_frozen(self.frozen, self.mr_ids)
+        except Exception:   # no jax / no device: CPU-only degraded mode
+            return None
+
+    def _ensure_delta_builder(self):
+        """Bootstrap the incremental builder on first use: one traced
+        full (re)build of the current graph. If the serving index was
+        *adopted* pre-built (possibly with non-default pruning flags),
+        the whole serving state is resynced to the rebuilt index — the
+        later partial re-freezes patch rows against the builder's entry
+        sets, so serving a different vintage would leave stale entries
+        in rows the builder never marks dirty."""
+        if self._delta is None:
+            from repro.build.delta import DeltaBuilder
+            adopted = self.build_stats is None
+            db = DeltaBuilder(
+                self.graph, self.config.k,
+                backend=self._delta_backend_name(),
+                fallback_frac=self.config.delta_fallback_frac)
+            db.full()
+            if adopted:
+                # may itself clear self._delta (sharded hot_swap), so
+                # assign the builder only afterwards
+                self._adopt_rebuilt_index(db)
+            self._delta = db
+        return self._delta
+
+    def _adopt_rebuilt_index(self, db) -> None:
+        """Swap the full serving state onto the delta builder's index
+        (bootstrap over an adopted index; see _ensure_delta_builder)."""
+        self.index = db.index
+        self.build_stats = db.stats
+        self.frozen = self.index.freeze(self.mr_ids)
+        if self.device_index is not None:
+            self.device_index = self._make_device_index()
+        self.executor.index = self.index
+        self.executor.frozen = self.frozen
+        self.executor.device_index = self.device_index
+        self.cache.clear()
+
+    def apply_delta(self, delta) -> dict:
+        """Apply a :class:`repro.core.graph.GraphDelta` end-to-end.
+
+        Incrementally re-derives the index (:mod:`repro.build.delta`),
+        re-freezes only the dirty/re-sorted row ranges, refreshes the
+        device layout, and evicts exactly the cached answers whose
+        ``(s, t)`` rows went dirty — everything else keeps serving from
+        cache. Returns a summary dict (delta accounting + evictions).
+        """
+        db = self._ensure_delta_builder()
+        res = db.apply(delta)
+        self.graph = db.graph
+        self.index = db.index
+        self.build_stats = res.stats
+        if res.fallback:
+            self.frozen = self.index.freeze(self.mr_ids)
+        else:
+            self.frozen = self.frozen.patch_rows(
+                self.index, self.mr_ids,
+                set(res.dirty_out.tolist()) | set(res.resort_out.tolist()),
+                set(res.dirty_in.tolist()) | set(res.resort_in.tolist()))
+        if self.device_index is not None:
+            self.device_index = self._make_device_index()
+        # the executor keeps its latency recorders; only the index
+        # references move. Repoint BEFORE invalidating the cache: a
+        # concurrent ticker flush that executed on the old index must not
+        # be able to re-cache a stale answer for a just-evicted key.
+        self.executor.index = self.index
+        self.executor.frozen = self.frozen
+        self.executor.device_index = self.device_index
+        if res.fallback:
+            evicted = len(self.cache)
+            self.cache.clear()
+        else:
+            evicted = self.cache.invalidate_rows(
+                dirty_s=set(res.dirty_out.tolist()),
+                dirty_t=set(res.dirty_in.tolist()))
+        self.deltas_applied += 1
+        return dict(delta=res.as_dict(), cache_evicted=evicted,
+                    dirty_out=res.dirty_out.tolist(),
+                    dirty_in=res.dirty_in.tolist(),
+                    deltas_applied=self.deltas_applied)
+
+    # -- shutdown --------------------------------------------------------- #
+    def close(self) -> None:
+        """Idempotent shutdown: stop (and join) the background deadline
+        ticker if one was started. Safe to call any number of times; the
+        service can keep answering synchronous queries afterwards."""
+        if self._closed:
+            return
+        self._closed = True
+        self.batcher.stop_ticker()
+
+    def __enter__(self) -> "RLCService":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.close()
+        return False
+
     # -- observability --------------------------------------------------- #
     def stats(self) -> dict:
         """Nested observability snapshot (the bench-JSON shape).
@@ -177,6 +295,7 @@ class RLCService:
         """
         return dict(
             queries_served=self.queries_served,
+            deltas_applied=self.deltas_applied,
             cache=self.cache.stats.as_dict(),
             executor=dict(
                 backends=self.executor.stats(),

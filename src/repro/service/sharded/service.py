@@ -20,6 +20,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import List, Optional
 
+import numpy as np
+
 from repro.build import BuildStats, build_rlc_index_with_stats
 from repro.core.graph import LabeledGraph
 from repro.core.minimum_repeat import LabelSeq, mr_id_space
@@ -86,10 +88,14 @@ class ShardedRLCService:
         self.router = TwoSidedRouter(self.plan)
         self.fanout = ScatterGatherExecutor(self.shards, self.router,
                                             config.batch_size)
-        self.cache = ResultCache(config.cache_capacity)
+        self.cache = ResultCache(config.cache_capacity,
+                                 ttl_s=config.cache_ttl_s)
         self.batcher = MicroBatcher(config.batch_size,
                                     config.max_wait_ms * 1e-3)
         self.queries_served = 0
+        self.deltas_applied = 0
+        self._delta = None          # lazy DeltaBuilder (apply_delta)
+        self._closed = False
 
     # ------------------------------------------------------------------ #
     @classmethod
@@ -117,9 +123,89 @@ class ShardedRLCService:
     query = RLCService.query
     query_batch = RLCService.query_batch
     _execute = RLCService._execute
+    _delta_backend_name = RLCService._delta_backend_name
+    _ensure_delta_builder = RLCService._ensure_delta_builder
+    close = RLCService.close
+    __enter__ = RLCService.__enter__
+    __exit__ = RLCService.__exit__
+
+    def _adopt_rebuilt_index(self, db) -> None:
+        """Sharded flavor of the bootstrap-over-adopted-index resync:
+        a full hot swap onto the builder's index (hot_swap nulls the
+        builder reference it knows nothing about; the caller reassigns
+        it right after this returns)."""
+        self.hot_swap(index=db.index)
+        self.build_stats = db.stats
 
     def _run_batch(self, batch: Batch):
         return self.fanout.execute(batch)
+
+    # -- incremental graph mutation -------------------------------------- #
+    def apply_delta(self, delta) -> dict:
+        """Apply a :class:`repro.core.graph.GraphDelta` across the shards.
+
+        The delta is re-derived incrementally once (the in-process global
+        build), then routed to its owning shards: only shards whose row
+        range intersects the dirty/re-sorted rows swap in fresh slices
+        (rolling, replica by replica, under the same atomic-publish
+        contract as :meth:`hot_swap`); untouched shards keep their
+        replicas and only repoint the always-available python-fallback
+        index. Cached answers are evicted only for dirty ``(s, t)`` rows.
+        """
+        db = self._ensure_delta_builder()
+        res = db.apply(delta)
+        self.graph = db.graph
+        self.index = db.index
+        self.build_stats = res.stats
+        if res.fallback:
+            frozen = self.index.freeze(self.mr_ids)
+            refreeze = None           # every shard swaps
+        else:
+            dirty_out = set(res.dirty_out.tolist())
+            dirty_in = set(res.dirty_in.tolist())
+            # patch under the *stable* aid every shard already serves
+            # with (Algorithm 1 only needs one consistent hub order, and
+            # cross-shard digest joins mix row vintages) — so re-sorted
+            # mover rows need no re-freeze, only content-dirty rows do
+            frozen = self.frozen.patch_rows(
+                self.index, self.mr_ids, dirty_out, dirty_in,
+                aid=self.frozen.aid)
+            refreeze = np.unique(np.concatenate(
+                [res.dirty_out, res.dirty_in]))
+        self.frozen = frozen
+        self.generation += 1
+        touched: List[int] = []
+        backend_name = f"delta[{self._delta_backend_name()}]"
+        for rs in self.shards:
+            owns_dirty = (refreeze is None or bool(
+                np.searchsorted(refreeze, rs.lo)
+                < np.searchsorted(refreeze, rs.hi)))
+            if owns_dirty:
+                rs.swap(self.generation, frozen.slice_rows(rs.lo, rs.hi),
+                        self.mr_ids, self.index, self._id_to_mr,
+                        backend=self.config.backend,
+                        use_device=self.config.use_device,
+                        build_backend=backend_name)
+                touched.append(rs.shard_id)
+            else:
+                # rows unchanged: keep the replicas (their slices view
+                # identical row content), but the python fallback must
+                # see the new dict index
+                for replica in rs.replicas:
+                    replica.executor.index = self.index
+        # invalidate only after every shard serves the new state (see
+        # RLCService.apply_delta on the ticker-flush ordering)
+        if res.fallback:
+            evicted = len(self.cache)
+            self.cache.clear()
+        else:
+            evicted = self.cache.invalidate_rows(dirty_s=dirty_out,
+                                                 dirty_t=dirty_in)
+        self.deltas_applied += 1
+        return dict(delta=res.as_dict(), shards_touched=touched,
+                    dirty_out=res.dirty_out.tolist(),
+                    dirty_in=res.dirty_in.tolist(),
+                    cache_evicted=evicted, generation=self.generation)
 
     # -- hot swap -------------------------------------------------------- #
     def hot_swap(self, index: Optional[RLCIndex] = None,
@@ -176,6 +262,10 @@ class ShardedRLCService:
         self.index = index
         self.frozen = frozen
         self.cache.clear()
+        # a cached DeltaBuilder is pinned to the pre-swap graph/index —
+        # drop it so the next apply_delta re-bootstraps from the swapped
+        # state instead of silently reverting the swap
+        self._delta = None
         return self.generation
 
     # -- observability --------------------------------------------------- #
@@ -183,6 +273,7 @@ class ShardedRLCService:
         """The RLCService stats shape plus per-shard breakdowns."""
         return dict(
             queries_served=self.queries_served,
+            deltas_applied=self.deltas_applied,
             cache=self.cache.stats.as_dict(),
             executor=self.fanout.stats(),
             scheduler=dict(

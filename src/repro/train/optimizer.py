@@ -9,9 +9,8 @@ Optimizer state inherits each parameter's sharding (FSDP over "data").
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ TP over "model").
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax

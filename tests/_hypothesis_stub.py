@@ -10,7 +10,6 @@ to keep the property tests meaningful.
 """
 from __future__ import annotations
 
-import functools
 import random
 import zlib
 

@@ -6,8 +6,8 @@ ablations — plus counter sanity invariants and the serving integration
 import numpy as np
 import pytest
 
-from repro.build import (BuildStats, build_rlc_index, build_rlc_index_with_stats,
-                         get_backend, list_backends)
+from repro.build import (build_rlc_index, build_rlc_index_with_stats,
+    get_backend, list_backends)
 from repro.core.baselines import bfs_rlc
 from repro.core.minimum_repeat import enumerate_mrs
 from repro.graphgen import (barabasi_albert, erdos_renyi, fig2_graph,

@@ -1,0 +1,84 @@
+"""CI configuration validity: the workflow must parse as YAML and keep
+the job contract the repo relies on (tier-1 gate on push/PR, nightly
+slow suite, benchmark smoke with artifact upload, ruff lint), and the
+benchmark orchestrator must actually expose the --smoke flag the smoke
+job invokes."""
+import os
+
+import pytest
+
+yaml = pytest.importorskip("yaml")
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+WORKFLOW = os.path.join(ROOT, ".github", "workflows", "ci.yml")
+
+
+def load_workflow():
+    with open(WORKFLOW) as f:
+        return yaml.safe_load(f)
+
+
+def test_workflow_parses_and_has_jobs():
+    wf = load_workflow()
+    assert wf["name"] == "ci"
+    # pyyaml parses the `on:` key as boolean True (YAML 1.1)
+    triggers = wf.get("on", wf.get(True))
+    assert "push" in triggers
+    assert "pull_request" in triggers
+    assert "schedule" in triggers
+    assert "workflow_dispatch" in triggers
+    assert set(wf["jobs"]) == {"tier1", "slow", "smoke", "lint"}
+
+
+def test_tier1_job_runs_the_roadmap_command():
+    wf = load_workflow()
+    steps = wf["jobs"]["tier1"]["steps"]
+    run_cmds = [s.get("run", "") for s in steps]
+    assert any("PYTHONPATH=src python -m pytest -x -q" in c
+               for c in run_cmds), "tier-1 gate must match ROADMAP.md"
+    # pip caching keyed on the checked-in requirements file
+    setup = [s for s in steps if "setup-python" in str(s.get("uses", ""))]
+    assert setup and setup[0]["with"]["cache"] == "pip"
+    assert os.path.exists(os.path.join(
+        ROOT, setup[0]["with"]["cache-dependency-path"]))
+
+
+def test_slow_job_gated_to_schedule_or_dispatch():
+    wf = load_workflow()
+    slow = wf["jobs"]["slow"]
+    assert "schedule" in slow["if"] and "workflow_dispatch" in slow["if"]
+    assert any("pytest -q -m slow" in s.get("run", "")
+               for s in slow["steps"])
+    # and tier1/smoke must NOT run on the nightly schedule
+    for job in ("tier1", "smoke"):
+        assert "!= 'schedule'" in wf["jobs"][job]["if"]
+
+
+def test_smoke_job_runs_and_uploads_artifacts():
+    wf = load_workflow()
+    smoke = wf["jobs"]["smoke"]
+    assert any("benchmarks/run.py --smoke" in s.get("run", "")
+               for s in smoke["steps"])
+    uploads = [s for s in smoke["steps"]
+               if "upload-artifact" in str(s.get("uses", ""))]
+    assert uploads, "smoke must upload benchmarks/artifacts"
+    assert "benchmarks/artifacts" in uploads[0]["with"]["path"]
+
+
+def test_lint_job_uses_checked_in_ruff_config():
+    wf = load_workflow()
+    lint = wf["jobs"]["lint"]
+    assert any("ruff check" in s.get("run", "") for s in lint["steps"])
+    assert os.path.exists(os.path.join(ROOT, "ruff.toml"))
+    cfg = open(os.path.join(ROOT, "ruff.toml")).read()
+    assert "line-length" in cfg and "[lint]" in cfg
+
+
+def test_run_py_exposes_smoke_flag():
+    import sys
+    if ROOT not in sys.path:
+        sys.path.insert(0, ROOT)
+    from benchmarks import run as bench_run
+    # --smoke and --full are registered and mutually exclusive
+    with pytest.raises(SystemExit):
+        bench_run.main(["--smoke", "--full"])

@@ -8,7 +8,7 @@ from repro.core.dense import DenseEngine, build_condensed_device
 from repro.core.device_index import DeviceIndex
 from repro.core.index_builder import build_rlc_index
 from repro.core.minimum_repeat import enumerate_mrs, mr_id_space
-from repro.graphgen import erdos_renyi, fig2_graph, random_labeled_graph
+from repro.graphgen import fig2_graph, random_labeled_graph
 
 
 @pytest.mark.parametrize("seed", range(3))

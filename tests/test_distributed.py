@@ -13,8 +13,7 @@ from repro.core.distributed import (distributed_all_mr_reach,
                                     distributed_query_batch, make_rlc_mesh)
 from repro.core.dense import DenseEngine
 from repro.core.device_index import DeviceIndex
-from repro.core.index_builder import build_rlc_index
-from repro.core.minimum_repeat import enumerate_mrs, mr_id_space
+from repro.core.minimum_repeat import mr_id_space
 from repro.graphgen import random_labeled_graph
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

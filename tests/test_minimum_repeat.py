@@ -1,16 +1,11 @@
 """Unit + property tests for minimum repeats, kernels and tails (paper §III-A,
 §IV, Lemmas 1-2, Theorem 1)."""
-import itertools
 
-import numpy as np
-import pytest
-from hypothesis import given, settings
+from hypothesis import given
 from hypothesis import strategies as st
 
 from repro.core.minimum_repeat import (count_mrs, enumerate_mrs,
-                                       failure_function, has_k_mr_path,
-                                       is_minimum_repeat, k_mr, kernel_tail,
-                                       minimum_repeat)
+    has_k_mr_path, k_mr, kernel_tail, minimum_repeat)
 
 seqs = st.lists(st.integers(0, 3), min_size=1, max_size=12).map(tuple)
 

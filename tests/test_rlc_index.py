@@ -1,6 +1,5 @@
 """Soundness + completeness of the RLC index (Theorems 2-3) against the
 product-automaton oracle and ETC, across random graph families."""
-import itertools
 
 import numpy as np
 import pytest

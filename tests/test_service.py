@@ -12,7 +12,6 @@ from repro.graphgen import erdos_renyi, fig1_graph
 from repro.service import (BatchExecutor, ExpressionError, MicroBatcher,
                            RLCService, ResultCache, ServiceConfig,
                            parse_expression)
-from repro.service.executor import ExecutorError
 
 
 # ------------------------------------------------------------------ #

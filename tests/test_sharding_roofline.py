@@ -1,7 +1,5 @@
 """Sharding rules (divisibility fallbacks, pod-axis filtering) and the
 roofline/HLO analysis machinery."""
-import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp
@@ -9,9 +7,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.roofline.analysis import (collective_bytes_from_hlo,
                                      model_flops, roofline_terms)
-from repro.roofline.hlo_tools import (dot_flops_histogram,
-                                      scan_aware_totals,
-                                      split_computations)
+from repro.roofline.hlo_tools import scan_aware_totals, split_computations
 from repro.sharding.partition import (ACT_RULES, PARAM_RULES,
                                       logical_to_spec)
 

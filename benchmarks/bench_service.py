@@ -23,7 +23,7 @@ from repro.core.queries import biased_true_queries
 from repro.graphgen import erdos_renyi
 from repro.service import RLCService, ServiceConfig
 
-from .common import Report, run_query_stream, zipf_weights
+from .common import Report, hist_summary_us, run_query_stream, zipf_weights
 
 ART = os.path.join(os.path.dirname(__file__), "artifacts")
 
@@ -31,13 +31,19 @@ ART = os.path.join(os.path.dirname(__file__), "artifacts")
 def _warmup(svc: RLCService, backend: str) -> None:
     """Trigger jit compilation for the (batch_size,) query shape outside the
     timed stream, without touching the result cache, then zero the
-    per-backend recorders so the report shows steady-state serving."""
+    per-backend recorders (and the matching registry reservoirs) so the
+    report shows steady-state serving."""
+    from repro.obs import Reservoir
     from repro.service.executor import BACKENDS
     from repro.service.metrics import LatencyRecorder
     B = svc.batcher.batch_size
     z = np.zeros(B, np.int32)
     svc.executor.execute(z, z, z, backend=backend)
     svc.executor.recorders = {b: LatencyRecorder(b) for b in BACKENDS}
+    m = svc.obs.registry.get("rlc_executor_batch_seconds")
+    if m is not None:
+        for _key, cell in m.series():   # drop the compile-batch outlier
+            cell.reservoir = Reservoir(cell.reservoir.cap)
 
 
 def run(quick: bool = True, smoke: bool = False, k: int = 2) -> Report:
@@ -79,6 +85,12 @@ def run(quick: bool = True, smoke: bool = False, k: int = 2) -> Report:
         ex = st["executor"]["backends"]
         served = max(ex, key=lambda b: ex[b]["batches"])
         b = ex[served]
+        # queue-wait vs compute, from the registry reservoirs: where a
+        # request's latency actually went (batcher hold vs executor run)
+        queue = hist_summary_us(svc.obs.registry,
+                                "rlc_batcher_queue_wait_seconds")
+        comp = hist_summary_us(svc.obs.registry,
+                               "rlc_executor_batch_seconds")
         row = dict(
             stage="serve", backend=served, requested_backend=backend,
             requests=len(stream),
@@ -87,6 +99,8 @@ def run(quick: bool = True, smoke: bool = False, k: int = 2) -> Report:
             q_p99_us=round(float(np.percentile(lat, 99)) * 1e6, 1),
             batch_p50_ms=round(b.get("p50_ms", 0.0), 3),
             batch_p99_ms=round(b.get("p99_ms", 0.0), 3),
+            queue_p50_us=queue["p50_us"], queue_p99_us=queue["p99_us"],
+            exec_p50_us=comp["p50_us"], exec_p99_us=comp["p99_us"],
             qps=round(len(stream) / lat.sum(), 1),
             cache_hit_rate=round(st["cache"]["hit_rate"], 4),
             batches_full=st["scheduler"]["batches_full"],
@@ -94,7 +108,8 @@ def run(quick: bool = True, smoke: bool = False, k: int = 2) -> Report:
             batches_drain=st["scheduler"]["batches_drain"],
         )
         rep.add(**row)
-        results[backend] = dict(row, stats=st)
+        results[backend] = dict(row, stats=st,
+                                telemetry=svc.telemetry_snapshot())
 
     # cache ablation on the fastest CPU backend
     for cap in (0, 256, 4096):

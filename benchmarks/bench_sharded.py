@@ -9,8 +9,17 @@ two-sided routing costs (cross-shard hops) and buys (per-host index
 slices shrink ~1/S while answers stay bit-identical).
 
 One hot-swap row measures the rolling-rebuild pause at the largest shard
-count. Writes the orchestrator CSV plus a JSON artifact
-(``benchmarks/artifacts/sharded.json``) alongside ``service.json``.
+count. Two telemetry stages close the run: an on/off pair quantifying the
+registry's counter overhead (throughput with ``telemetry=False`` vs the
+default-on counters), and a tracing-enabled run whose sampled spans
+decompose p99 latency into queue-wait / route / executor components and
+export a Chrome ``trace_event`` timeline.
+
+Writes the orchestrator CSV plus JSON artifacts alongside
+``service.json``: ``benchmarks/artifacts/sharded.json`` (rows + stats +
+telemetry snapshot), ``sharded_trace.json`` (Chrome trace — load in
+``chrome://tracing`` / Perfetto), and ``sharded.prom`` (Prometheus text
+format).
 """
 from __future__ import annotations
 
@@ -25,7 +34,7 @@ from repro.graphgen import erdos_renyi
 from repro.service import RLCService, ServiceConfig
 from repro.service.sharded import ShardedRLCService, ShardedServiceConfig
 
-from .common import Report, run_query_stream, zipf_weights
+from .common import Report, hist_summary_us, run_query_stream, zipf_weights
 
 ART = os.path.join(os.path.dirname(__file__), "artifacts")
 
@@ -66,11 +75,17 @@ def run(quick: bool = True, smoke: bool = False, k: int = 2) -> Report:
         shard_build_s = time.perf_counter() - t0
         lat = run_query_stream(svc, stream, chunk=64)
         st = svc.stats()
+        queue = hist_summary_us(svc.obs.registry,
+                                "rlc_batcher_queue_wait_seconds")
+        comp = hist_summary_us(svc.obs.registry,
+                               "rlc_executor_batch_seconds")
         row = dict(
             stage="serve", shards=S, replicas=num_replicas,
             requests=len(stream),
             q_p50_us=round(float(np.percentile(lat, 50)) * 1e6, 1),
             q_p99_us=round(float(np.percentile(lat, 99)) * 1e6, 1),
+            queue_p50_us=queue["p50_us"], queue_p99_us=queue["p99_us"],
+            exec_p50_us=comp["p50_us"], exec_p99_us=comp["p99_us"],
             qps=round(len(stream) / lat.sum(), 1),
             cache_hit_rate=round(st["cache"]["hit_rate"], 4),
             local_ratio=st["router"]["local_ratio"],
@@ -80,7 +95,8 @@ def run(quick: bool = True, smoke: bool = False, k: int = 2) -> Report:
             shard_build_s=round(shard_build_s, 3),
         )
         rep.add(**row)
-        results[f"shards_{S}"] = dict(row, stats=st)
+        results[f"shards_{S}"] = dict(row, stats=st,
+                                      telemetry=svc.telemetry_snapshot())
 
     # hot-swap pause at the largest shard count: time the rolling rebuild
     svc = ShardedRLCService.build(
@@ -98,7 +114,61 @@ def run(quick: bool = True, smoke: bool = False, k: int = 2) -> Report:
             post_swap_p50_us=round(float(np.percentile(lat, 50)) * 1e6, 1))
     results["hot_swap"] = dict(shards=shard_counts[-1], swap_s=swap_s)
 
+    # -- telemetry overhead: identical runs with counters off vs on ------ #
+    S = shard_counts[-1]
+    qps = {}
+    for telemetry in (False, True):
+        svc = ShardedRLCService.build(
+            g, ShardedServiceConfig(k=k, batch_size=32, max_wait_ms=2.0,
+                                    cache_capacity=1024, num_shards=S,
+                                    num_replicas=num_replicas,
+                                    telemetry=telemetry),
+            index=base.index)
+        run_query_stream(svc, stream[:500], chunk=64)          # warm
+        lat = run_query_stream(svc, stream, chunk=64)
+        qps[telemetry] = len(stream) / float(lat.sum())
+    overhead = 1.0 - qps[True] / qps[False]
+    rep.add(stage="telemetry_overhead", shards=S,
+            qps_off=round(qps[False], 1), qps_on=round(qps[True], 1),
+            overhead_frac=round(overhead, 4))
+    results["telemetry_overhead"] = dict(
+        shards=S, qps_off=qps[False], qps_on=qps[True],
+        overhead_frac=overhead)
+
+    # -- tracing-enabled run: spans -> latency decomposition + exports -- #
+    sample_rate = 1.0 if smoke else 0.05
+    svc = ShardedRLCService.build(
+        g, ShardedServiceConfig(k=k, batch_size=32, max_wait_ms=2.0,
+                                cache_capacity=1024, num_shards=S,
+                                num_replicas=num_replicas,
+                                trace_sample_rate=sample_rate),
+        index=base.index)
+    lat = run_query_stream(svc, stream, chunk=64)
+    reg = svc.obs.registry
+    decomposition = dict(
+        q_p50_us=round(float(np.percentile(lat, 50)) * 1e6, 1),
+        q_p99_us=round(float(np.percentile(lat, 99)) * 1e6, 1),
+        queue_wait=hist_summary_us(reg, "rlc_batcher_queue_wait_seconds"),
+        route_local=hist_summary_us(reg, "rlc_fanout_subbatch_seconds",
+                                    dict(path="local")),
+        route_remote=hist_summary_us(reg, "rlc_fanout_subbatch_seconds",
+                                     dict(path="remote")),
+        executor=hist_summary_us(reg, "rlc_executor_batch_seconds"))
+    results["latency_decomposition"] = decomposition
+    results["telemetry"] = svc.telemetry_snapshot(
+        extra=dict(latency_decomposition=decomposition))
+    results["tracing"] = svc.obs.tracer.stats()   # includes sample_rate
+    trace = svc.chrome_trace()
+    rep.add(stage="tracing", shards=S, sample_rate=sample_rate,
+            spans=len(trace["traceEvents"]) - 1,
+            queue_p99_us=decomposition["queue_wait"]["p99_us"],
+            exec_p99_us=decomposition["executor"]["p99_us"])
+
     os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "sharded_trace.json"), "w") as f:
+        json.dump(trace, f)
+    with open(os.path.join(ART, "sharded.prom"), "w") as f:
+        f.write(svc.prometheus())
     with open(os.path.join(ART, "sharded.json"), "w") as f:
         json.dump(dict(graph=g.summary(), k=k, requests=n_requests,
                        zipf_exponent=1.0, replicas=num_replicas,

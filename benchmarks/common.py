@@ -39,6 +39,32 @@ def run_query_stream(svc, stream, chunk: int) -> np.ndarray:
     return np.asarray(lat)
 
 
+def hist_summary_us(registry, name: str, labels: Dict[str, str] = None
+                    ) -> Dict[str, float]:
+    """Pool every series of one registry histogram (optionally filtered by
+    a label subset) into ``{count, p50_us, p99_us}``.
+
+    Percentiles come from the pooled reservoir samples — exact while each
+    series is below its cap; the serving benches use this to decompose
+    request latency into queue-wait / route / executor components."""
+    m = registry.get(name)
+    samples: List[float] = []
+    count = 0
+    if m is not None:
+        for key, cell in m.series():
+            lab = dict(zip(m.labelnames, key))
+            if labels and any(lab.get(k) != v for k, v in labels.items()):
+                continue
+            samples.extend(cell.reservoir.samples)
+            count += cell.reservoir.count
+    if not samples:
+        return dict(count=0, p50_us=0.0, p99_us=0.0)
+    arr = np.asarray(samples)
+    return dict(count=int(count),
+                p50_us=round(float(np.percentile(arr, 50)) * 1e6, 1),
+                p99_us=round(float(np.percentile(arr, 99)) * 1e6, 1))
+
+
 def timeit(fn: Callable, repeats: int = 1) -> float:
     """Median wall seconds over ``repeats`` calls."""
     ts = []

@@ -61,9 +61,11 @@ def main(argv=None):
         "sharded": lambda: bench_sharded.run(quick, smoke),
     }
     failures = []
+    ran = []
     for name, fn in suites.items():
         if args.only and args.only != name:
             continue
+        ran.append(name)
         print(f"\n===== {name} =====", flush=True)
         t0 = time.time()
         try:
@@ -77,10 +79,65 @@ def main(argv=None):
             import traceback
             traceback.print_exc()
             failures.append((name, repr(e)))
+    failures.extend(validate_telemetry_artifacts(ran))
     if failures:
         print("\nFAILED suites:", failures)
         sys.exit(1)
     print("\nAll benchmark suites completed.")
+
+
+def validate_telemetry_artifacts(ran):
+    """Check the telemetry the serving suites just emitted: every snapshot
+    embedded in their JSON artifacts must parse against the versioned
+    schema, and the Chrome trace dump must be well-formed. Runs only for
+    the suites that actually executed; returns ``(name, error)`` failure
+    tuples in the orchestrator's format."""
+    import json
+
+    from repro.obs import validate_snapshot
+
+    failures = []
+
+    def check(name, fn):
+        try:
+            fn()
+        except Exception as e:
+            failures.append((name, repr(e)))
+
+    def snapshots_of(path):
+        with open(path) as f:
+            doc = json.load(f)
+        found = 0
+        for res in doc.get("results", {}).values():
+            if isinstance(res, dict) and "telemetry" in res:
+                validate_snapshot(res["telemetry"])
+                found += 1
+        if "telemetry" in doc.get("results", {}):
+            validate_snapshot(doc["results"]["telemetry"])
+        if not found:
+            raise ValueError(f"no telemetry snapshots in {path}")
+
+    def chrome_trace_ok(path):
+        with open(path) as f:
+            doc = json.load(f)
+        evs = doc["traceEvents"]
+        if not isinstance(evs, list) or not evs:
+            raise ValueError("empty traceEvents")
+        for ev in evs:
+            if ev["ph"] not in ("X", "M"):
+                raise ValueError(f"unexpected phase {ev['ph']!r}")
+            if ev["ph"] == "X" and (ev["dur"] < 0 or ev["ts"] < 0):
+                raise ValueError(f"negative ts/dur in {ev}")
+
+    if "service" in ran:
+        check("service:telemetry",
+              lambda: snapshots_of(os.path.join(ART, "service.json")))
+    if "sharded" in ran:
+        check("sharded:telemetry",
+              lambda: snapshots_of(os.path.join(ART, "sharded.json")))
+        check("sharded:trace", lambda: chrome_trace_ok(
+            os.path.join(ART, "sharded_trace.json")))
+    return failures
 
 
 if __name__ == "__main__":

@@ -49,15 +49,17 @@ __all__ = [
 
 
 def build_rlc_index_with_stats(graph: LabeledGraph, k: int,
-                               backend: str = "auto", **kw
+                               backend: str = "auto", observer=None, **kw
                                ) -> Tuple[RLCIndex, BuildStats]:
     """Build the RLC index with the chosen backend; returns (index, stats).
 
     ``**kw`` reaches the backend constructor (``use_pr1/2/3`` everywhere;
     ``mode``/``scalar_threshold`` on the batched backends; ``interpret``
-    on pallas).
+    on pallas). ``observer``: optional
+    :class:`repro.obs.BuildPhaseObserver` receiving per-(hub, direction)
+    phase timings and counter deltas.
     """
-    return get_backend(backend, **kw).build(graph, k)
+    return get_backend(backend, **kw).set_observer(observer).build(graph, k)
 
 
 def build_rlc_index(graph: LabeledGraph, k: int, backend: str = "auto",

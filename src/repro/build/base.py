@@ -163,6 +163,14 @@ class BuildBackend:
         self.use_pr1 = use_pr1
         self.use_pr2 = use_pr2
         self.use_pr3 = use_pr3
+        #: optional :class:`repro.obs.BuildPhaseObserver` — when set, the
+        #: per-(hub, direction) phase loops report timings and pruning
+        #: counter deltas into its registry (None = zero overhead)
+        self.observer = None
+
+    def set_observer(self, observer) -> "BuildBackend":
+        self.observer = observer
+        return self
 
     # -- subclass hook --------------------------------------------------- #
     def _build(self, graph: LabeledGraph, k: int, stats: BuildStats
@@ -176,6 +184,8 @@ class BuildBackend:
         t0 = time.perf_counter()
         index = self._build(graph, int(k), stats)
         stats.wall_time_s = time.perf_counter() - t0
+        if self.observer is not None:
+            self.observer.build_done(self.name, stats.wall_time_s)
         return index, stats
 
 

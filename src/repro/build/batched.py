@@ -40,6 +40,7 @@ inserter, same index — identical by construction). ``mode`` forces
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -661,10 +662,25 @@ class PhaseRunner:
 
     def run(self, v: int, backward: bool, probe=None) -> None:
         """Run one ``(hub, direction)`` phase (no-op on a degree-0 hub,
-        exactly like the full build's skip)."""
-        backend = self.backend
+        exactly like the full build's skip). With a
+        :class:`repro.obs.BuildPhaseObserver` on the backend, the phase's
+        wall time and counter deltas are reported (the degree-0 skip is
+        never timed — it would drown the histograms in zeros)."""
         if not (self.in_deg[v] if backward else self.out_deg[v]):
             return
+        obs = self.backend.observer
+        if obs is None:
+            self._run_phase(v, backward, probe)
+            return
+        before = self.stats.counters()
+        t0 = time.perf_counter()
+        self._run_phase(v, backward, probe)
+        obs.phase(v, backward, time.perf_counter() - t0,
+                  counter_delta=tuple(
+                      a - b for a, b in zip(self.stats.counters(), before)))
+
+    def _run_phase(self, v: int, backward: bool, probe=None) -> None:
+        backend = self.backend
         if self.can_batch:
             est = self._est[backward][v]
             if backend.mode == "vector":

@@ -63,6 +63,7 @@ import numpy as np
 from repro.core.graph import GraphDelta, LabeledGraph
 from repro.core.minimum_repeat import mr_id_space
 from repro.core.rlc_index import RLCIndex
+from repro.obs import NULL_OBS
 
 from ..base import (BuildStats, PhaseProbe, access_schedule, get_backend,
                     mask_vertices, vertex_mask)
@@ -111,6 +112,12 @@ class DeltaResult:
 
     stats: BuildStats
     fallback: bool = False
+    #: why the incremental pass was abandoned (None when it succeeded):
+    #: ``"static_budget"`` — conditions A/B alone blew the budget before
+    #: any carried state was touched; ``"budget"`` — the re-run work
+    #: crossed it mid-pass; ``"requested"`` — rebuild_delta called
+    #: directly.
+    fallback_reason: Optional[str] = None
     phases_total: int = 0
     phases_rerun: int = 0
     phases_replayed: int = 0
@@ -125,6 +132,7 @@ class DeltaResult:
 
     def as_dict(self) -> dict:
         return dict(fallback=self.fallback,
+                    fallback_reason=self.fallback_reason,
                     phases_total=self.phases_total,
                     phases_rerun=self.phases_rerun,
                     phases_replayed=self.phases_replayed,
@@ -148,7 +156,7 @@ class DeltaBuilder:
     """
 
     def __init__(self, graph: LabeledGraph, k: int, backend: str = "numpy",
-                 fallback_frac: float = 0.25, **backend_kw):
+                 fallback_frac: float = 0.25, obs=None, **backend_kw):
         if not (0.0 < fallback_frac <= 1.0):
             raise ValueError(
                 f"fallback_frac must be in (0, 1], got {fallback_frac}")
@@ -157,6 +165,31 @@ class DeltaBuilder:
         self.fallback_frac = fallback_frac
         self._backend_name = backend
         self._backend_kw = dict(backend_kw)
+        # delta-engine telemetry: apply outcomes, fallback attribution,
+        # phase dispositions, dirty causes. Per-phase timings go through
+        # BuildPhaseObserver ("delta" context for re-runs, "delta_full"
+        # for the traced bootstraps/rebuilds).
+        self.obs = obs or NULL_OBS
+        reg = self.obs.registry
+        self._m_apply = reg.counter(
+            "rlc_delta_applies", desc="delta applies by outcome",
+            labelnames=("outcome",))
+        self._m_fb = reg.counter(
+            "rlc_delta_fallbacks",
+            desc="incremental applies abandoned to a full rebuild",
+            labelnames=("reason",))
+        phases = reg.counter("rlc_delta_phases",
+                             desc="phases per incremental apply",
+                             labelnames=("kind",))
+        self._m_rerun = phases.labels(kind="rerun")
+        self._m_replay = phases.labels(kind="replayed")
+        self._m_cause = reg.counter(
+            "rlc_delta_dirty_causes",
+            desc="why phases went dirty (A/B/C/D conditions)",
+            labelnames=("cause",))
+        self._m_apply_s = reg.histogram(
+            "rlc_delta_apply_seconds",
+            desc="end-to-end wall time of one apply()", unit="s").labels()
         self._new_backend()     # fail fast on bad names/kwargs
         self.index: Optional[RLCIndex] = None
         self.trace: Optional[BuildTrace] = None
@@ -173,12 +206,15 @@ class DeltaBuilder:
         self.deltas_applied = 0
         self.fallbacks = 0
 
-    def _new_backend(self) -> BatchedBackend:
+    def _new_backend(self, context: Optional[str] = None) -> BatchedBackend:
         b = get_backend(self._backend_name, **self._backend_kw)
         if not isinstance(b, BatchedBackend):
             raise ValueError(
                 f"delta builds need a batched backend, got "
                 f"{self._backend_name!r}")
+        if context is not None:
+            # None observer in disabled mode — phases stay untimed
+            b.set_observer(self.obs.build_observer(context))
         return b
 
     # ------------------------------------------------------------------ #
@@ -215,8 +251,8 @@ class DeltaBuilder:
         t0 = time.perf_counter()
         order, aid = access_schedule(graph)
         index = RLCIndex(graph.num_vertices, self.k, aid)
-        runner = PhaseRunner(self._new_backend(), graph, self.k, index,
-                             stats)
+        runner = PhaseRunner(self._new_backend("delta_full"), graph, self.k,
+                             index, stats)
         trace = BuildTrace(graph.num_vertices, nl)
         for v in order:
             v = int(v)
@@ -238,17 +274,23 @@ class DeltaBuilder:
         self._needs_full = False
         return self.index, self.stats
 
-    def rebuild_delta(self, delta: GraphDelta, validate: bool = True
-                      ) -> DeltaResult:
-        """Escape hatch: apply the delta, then full traced rebuild."""
+    def rebuild_delta(self, delta: GraphDelta, validate: bool = True,
+                      reason: str = "requested") -> DeltaResult:
+        """Escape hatch: apply the delta, then full traced rebuild.
+        ``reason`` records *why* the incremental pass was abandoned
+        (surfaced in ``DeltaResult.fallback_reason`` and the
+        ``rlc_delta_fallbacks`` counter)."""
         if validate:
             delta.validate(self.graph)
         self.graph = self.graph.apply_delta(delta, validate=False)
         self.full()
         self.deltas_applied += 1
         self.fallbacks += 1
+        self._m_apply.inc(1, outcome="fallback")
+        self._m_fb.inc(1, reason=reason)
         V2 = 2 * self.graph.num_vertices
         return DeltaResult(stats=self.stats, fallback=True,
+                           fallback_reason=reason,
                            phases_total=V2, phases_rerun=V2)
 
     # ------------------------------------------------------------------ #
@@ -334,11 +376,12 @@ class DeltaBuilder:
         for u in movers:
             mover_bits |= 1 << u
 
-        def bail() -> DeltaResult:
+        def bail(reason: str) -> DeltaResult:
             """Hand over to the full-rebuild escape hatch."""
             self.graph = old_graph
-            res = self.rebuild_delta(delta, validate=False)
+            res = self.rebuild_delta(delta, validate=False, reason=reason)
             res.stats.wall_time_s = time.perf_counter() - t0
+            self._m_apply_s.observe(res.stats.wall_time_s)
             return res
 
         # -- static pre-pass: evaluate conditions A/B once for every
@@ -368,7 +411,7 @@ class DeltaBuilder:
                     static_cause[(v << 1) | backward] = c
                     est += pt.work + 1
             if est > budget:
-                return bail()
+                return bail("static_budget")
 
         rep = self._rep
         old_mask = self._omask
@@ -378,8 +421,8 @@ class DeltaBuilder:
         self._patch_adjacency(new_graph, delta)
         stats = BuildStats(backend=f"delta[{self._backend_name}]")
         index = RLCIndex(V, self.k, new_aid)
-        runner = PhaseRunner(self._new_backend(), new_graph, self.k, index,
-                             stats, mirror=self._mirror)
+        runner = PhaseRunner(self._new_backend("delta"), new_graph, self.k,
+                             index, stats, mirror=self._mirror)
         adopted = runner.adopted_mirror
         if runner.can_batch and self._adjb:
             runner.ctx._adjb.update(self._adjb)
@@ -551,7 +594,7 @@ class DeltaBuilder:
                         changed_by_hub[backward][v] = changed
                         dirty_rows[backward] |= changed
         except _FallbackNeeded:
-            return bail()
+            return bail("budget")
 
         _add_counters(stats, acc)
         self._capture(runner, index)
@@ -608,6 +651,12 @@ class DeltaBuilder:
                 else:
                     masks.pop(v, None)
         self._needs_full = False
+        self._m_apply.inc(1, outcome="incremental")
+        self._m_rerun.inc(rerun)
+        self._m_replay.inc(replayed)
+        for cause, n in causes.items():
+            self._m_cause.inc(n, cause=cause)
+        self._m_apply_s.observe(stats.wall_time_s)
         return DeltaResult(
             stats=stats,
             phases_total=2 * V,

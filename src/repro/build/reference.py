@@ -17,6 +17,7 @@ Semantics notes (Algorithm 2 deviations and readings) live in
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 from typing import Callable, Dict, List, Optional, Set, Tuple
 
@@ -174,16 +175,28 @@ class PythonBackend(BuildBackend):
         index = RLCIndex(graph.num_vertices, k, aid)
         inserter = PrunedInserter(index, stats, self.use_pr1, self.use_pr2)
         neighbors = _GraphNeighbors(graph)
+        obs = self.observer
         for v in order:
             v = int(v)
             for backward in (True, False):
-                kernels = kernel_search_scalar(
-                    neighbors, inserter, stats, minimum_repeat, v, k,
-                    backward)
-                for L, seeds in kernels.items():
-                    kernel_bfs_scalar(neighbors, inserter, stats,
-                                      self.use_pr3, v, L, seeds, backward)
+                if obs is not None:
+                    before = stats.counters()
+                    t0 = time.perf_counter()
+                self._phase(neighbors, inserter, stats, v, k, backward)
+                if obs is not None:
+                    obs.phase(v, backward, time.perf_counter() - t0,
+                              counter_delta=tuple(
+                                  a - b for a, b in zip(stats.counters(),
+                                                        before)))
         return index
+
+    def _phase(self, neighbors, inserter, stats, v: int, k: int,
+               backward: bool) -> None:
+        kernels = kernel_search_scalar(
+            neighbors, inserter, stats, minimum_repeat, v, k, backward)
+        for L, seeds in kernels.items():
+            kernel_bfs_scalar(neighbors, inserter, stats,
+                              self.use_pr3, v, L, seeds, backward)
 
 
 register_backend("python", PythonBackend)

@@ -21,6 +21,8 @@ from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Callable, Optional, Tuple
 
+from repro.obs import NULL_OBS
+
 Key = Tuple[int, int, int]  # (s, t, mr_id)
 
 
@@ -57,7 +59,7 @@ class ResultCache:
     """
 
     def __init__(self, capacity: int, ttl_s: Optional[float] = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic, obs=None):
         if capacity < 0:
             raise ValueError(f"capacity must be >= 0, got {capacity}")
         if ttl_s is not None and ttl_s <= 0:
@@ -67,6 +69,24 @@ class ResultCache:
         self.clock = clock
         self._d: "OrderedDict[Key, Tuple[bool, float]]" = OrderedDict()
         self.stats = CacheStats()
+        # registry cells mirroring CacheStats (the registry survives
+        # service-internal resets and feeds the exporters)
+        self.obs = obs or NULL_OBS
+        reg = self.obs.registry
+        look = reg.counter("rlc_cache_lookups",
+                           desc="result-cache lookups by outcome",
+                           labelnames=("outcome",))
+        self._m_hit = look.labels(outcome="hit")
+        self._m_miss = look.labels(outcome="miss")
+        self._m_expired = look.labels(outcome="expired")
+        self._m_evict = reg.counter(
+            "rlc_cache_evictions",
+            desc="LRU capacity evictions").labels()
+        self._m_inval = reg.counter(
+            "rlc_cache_invalidations",
+            desc="entries dropped by invalidate_rows/clear").labels()
+        self._m_size = reg.gauge("rlc_cache_size",
+                                 desc="entries currently cached").labels()
 
     def __len__(self) -> int:
         return len(self._d)
@@ -75,19 +95,24 @@ class ResultCache:
         """Answer if cached and fresh (refreshing recency), else ``None``."""
         if self.capacity == 0:
             self.stats.misses += 1
+            self._m_miss.inc()
             return None
         try:
             val, stamp = self._d[key]
         except KeyError:
             self.stats.misses += 1
+            self._m_miss.inc()
             return None
         if self.ttl_s is not None and self.clock() - stamp >= self.ttl_s:
             del self._d[key]
             self.stats.expirations += 1
             self.stats.misses += 1
+            self._m_expired.inc()
+            self._m_miss.inc()
             return None
         self._d.move_to_end(key)
         self.stats.hits += 1
+        self._m_hit.inc()
         return val
 
     def put(self, key: Key, value: bool) -> None:
@@ -99,6 +124,8 @@ class ResultCache:
         while len(self._d) > self.capacity:
             self._d.popitem(last=False)
             self.stats.evictions += 1
+            self._m_evict.inc()
+        self._m_size.set(len(self._d))
 
     def invalidate_rows(self, dirty_s=None, dirty_t=None) -> int:
         """Evict every key whose source row is in ``dirty_s`` or target
@@ -112,8 +139,12 @@ class ResultCache:
         for k in doomed:
             del self._d[k]
         self.stats.invalidations += len(doomed)
+        self._m_inval.inc(len(doomed))
+        self._m_size.set(len(self._d))
         return len(doomed)
 
     def clear(self) -> None:
         self.stats.invalidations += len(self._d)
+        self._m_inval.inc(len(self._d))
         self._d.clear()
+        self._m_size.set(0)

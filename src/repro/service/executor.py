@@ -13,7 +13,10 @@ Backends that need a :class:`DeviceIndex` degrade gracefully: when the
 device layout is absent or a device dispatch raises, the executor walks a
 fallback chain toward ``python`` and records which backend actually
 answered. Per-backend latency/throughput lands in
-:class:`repro.service.metrics.LatencyRecorder`.
+:class:`repro.service.metrics.LatencyRecorder` and — when an
+:class:`repro.obs.Observability` is attached — in the shared metrics
+registry (labeled by backend and shard), with per-attempt spans when the
+batch rides a sampled trace.
 """
 from __future__ import annotations
 
@@ -24,6 +27,7 @@ import numpy as np
 
 from repro.core.minimum_repeat import LabelSeq
 from repro.core.rlc_index import FrozenRLCIndex, RLCIndex
+from repro.obs import NULL_OBS
 
 from .metrics import LatencyRecorder
 
@@ -48,7 +52,7 @@ class BatchExecutor:
                  frozen: Optional[FrozenRLCIndex] = None,
                  device_index=None,
                  id_to_mr: Optional[Sequence[LabelSeq]] = None,
-                 backend: str = "auto"):
+                 backend: str = "auto", obs=None, shard: str = "-"):
         if backend != "auto" and backend not in BACKENDS:
             raise ValueError(
                 f"unknown backend {backend!r}; choose from "
@@ -61,6 +65,32 @@ class BatchExecutor:
         self.recorders: Dict[str, LatencyRecorder] = {
             b: LatencyRecorder(b) for b in BACKENDS}
         self.fallbacks = 0
+        # registry cells, pre-bound per backend (shard = "-" single-host).
+        # The registry outlives this executor, so replica hot-swaps never
+        # reset the labeled series even though self.fallbacks restarts.
+        self.obs = obs or NULL_OBS
+        reg = self.obs.registry
+        lat = reg.histogram(
+            "rlc_executor_batch_seconds",
+            desc="wall time of one executed batch, by answering backend",
+            unit="s", labelnames=("backend", "shard"))
+        bat = reg.counter("rlc_executor_batches",
+                          desc="batches answered, by backend",
+                          labelnames=("backend", "shard"))
+        qry = reg.counter("rlc_executor_queries",
+                          desc="real (unpadded) queries answered",
+                          labelnames=("backend", "shard"))
+        self._m_lat = {b: lat.labels(backend=b, shard=shard)
+                       for b in BACKENDS}
+        self._m_bat = {b: bat.labels(backend=b, shard=shard)
+                       for b in BACKENDS}
+        self._m_qry = {b: qry.labels(backend=b, shard=shard)
+                       for b in BACKENDS}
+        self._m_fallback = reg.counter(
+            "rlc_executor_fallbacks",
+            desc="batches not answered by the first-choice backend",
+            labelnames=("from", "to", "shard"))
+        self._shard = shard
 
     # ------------------------------------------------------------------ #
     def available(self, backend: str) -> bool:
@@ -90,12 +120,15 @@ class BatchExecutor:
     # ------------------------------------------------------------------ #
     def execute(self, s: np.ndarray, t: np.ndarray, mr_id: np.ndarray,
                 n_real: Optional[int] = None,
-                backend: Optional[str] = None) -> Tuple[np.ndarray, str]:
+                backend: Optional[str] = None,
+                trace=None) -> Tuple[np.ndarray, str]:
         """Answer a padded batch; returns ``(answers[:n_real], backend)``.
 
         Tries the requested backend, then every remaining backend in
         ``BACKENDS`` order (a device failure must never fail the query —
-        the python reference can always answer).
+        the python reference can always answer). ``trace``: optional
+        :class:`repro.obs.Trace`; each attempt gets an ``exec:<backend>``
+        span, so a fallback chain is visible as consecutive spans.
         """
         first = self.resolve(backend)
         chain = [first] + [b for b in BACKENDS
@@ -108,12 +141,26 @@ class BatchExecutor:
             try:
                 t0 = time.perf_counter()
                 ans = self._run(b, s, t, mr_id, n)
-                self.recorders[b].record(time.perf_counter() - t0, n)
+                dt = time.perf_counter() - t0
+                self.recorders[b].record(dt, n)
+                self._m_lat[b].observe(dt)
+                self._m_bat[b].inc()
+                self._m_qry[b].inc(n)
+                if trace is not None:
+                    trace.add(f"exec:{b}", trace.tracer._now() - dt, dt,
+                              cat="executor", n=n, fallback=i > 0)
                 if i > 0:
                     self.fallbacks += 1
+                    self._m_fallback.labels(
+                        **{"from": first, "to": b,
+                           "shard": self._shard}).inc()
                 return np.asarray(ans[:n], dtype=bool), b
             except Exception as e:  # noqa: BLE001 — fall through the chain
                 last_err = e
+                if trace is not None:
+                    dt = time.perf_counter() - t0
+                    trace.add(f"exec:{b}", trace.tracer._now() - dt, dt,
+                              cat="executor", error=type(e).__name__)
         raise ExecutorError(
             f"all backends failed for batch of {n} queries") from last_err
 

@@ -1,38 +1,57 @@
-"""Latency / throughput accounting for the serving path."""
+"""Latency / throughput accounting for the serving path.
+
+Backed by :class:`repro.obs.metrics.Reservoir` since the telemetry PR:
+the recorder previously kept *every* batch sample in a grow-forever
+python list (``samples_s``), a memory leak under sustained traffic — a
+service doing 1k batches/s leaked ~30 MB/hour per backend. Percentiles
+are exact below the reservoir cap and reservoir-sampled estimates above
+it; ``queries`` / ``batches`` / ``total_s`` stay exact forever. The
+``summary()`` keys are unchanged (backward-compatible with every bench
+artifact and stats consumer).
+"""
 from __future__ import annotations
 
 from typing import Dict, List
 
-import numpy as np
+from repro.obs.metrics import Reservoir
+
+#: per-recorder sample bound: exact percentiles below, reservoir above.
+DEFAULT_SAMPLE_CAP = 4096
 
 
 class LatencyRecorder:
     """Per-backend wall-clock samples with percentile summaries.
 
-    One sample = one executed batch; ``queries`` tracks the real (unpadded)
-    queries answered so throughput reflects useful work.
+    One sample = one executed batch; ``queries`` tracks the real
+    (unpadded) queries answered so throughput reflects useful work.
+    Memory is bounded by ``sample_cap``.
     """
 
-    def __init__(self, name: str):
+    def __init__(self, name: str, sample_cap: int = DEFAULT_SAMPLE_CAP):
         self.name = name
-        self.samples_s: List[float] = []
+        self._reservoir = Reservoir(sample_cap)
         self.queries = 0
         self.batches = 0
 
     def record(self, seconds: float, n_queries: int) -> None:
-        self.samples_s.append(float(seconds))
+        self._reservoir.add(float(seconds))
         self.queries += int(n_queries)
         self.batches += 1
 
     @property
+    def samples_s(self) -> List[float]:
+        """The *stored* samples (bounded; all of them while under the
+        cap). Kept for callers that eyeball distributions."""
+        return list(self._reservoir.samples)
+
+    @property
     def total_s(self) -> float:
-        return float(sum(self.samples_s))
+        return self._reservoir.total
 
     def percentile(self, p: float) -> float:
-        """p in [0, 100]; seconds per batch. 0.0 when empty."""
-        if not self.samples_s:
-            return 0.0
-        return float(np.percentile(np.asarray(self.samples_s), p))
+        """p in [0, 100]; seconds per batch. 0.0 when empty. Exact while
+        ``batches <= sample_cap``, a reservoir estimate beyond."""
+        return self._reservoir.percentile(p)
 
     @property
     def qps(self) -> float:

@@ -41,6 +41,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import NULL_OBS
+
 
 @dataclass(frozen=True)
 class Request:
@@ -68,6 +70,8 @@ class Batch:
     mr_id: np.ndarray
     mr_len: int
     reason: str                 # "full" | "deadline" | "drain"
+    flushed_at: float = 0.0     # scheduler-clock flush time (queue-wait
+                                # spans: flushed_at - request.enqueued_at)
 
     @property
     def n_real(self) -> int:
@@ -80,7 +84,7 @@ class Batch:
 
 class MicroBatcher:
     def __init__(self, batch_size: int, max_wait_s: float = 0.002,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic, obs=None):
         if batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got {batch_size}")
         if max_wait_s < 0:
@@ -99,6 +103,31 @@ class MicroBatcher:
         self.batches_drain = 0
         self.coalesced = 0
         self.ticker_errors = 0
+        # registry cells: per-request queue wait (admission -> flush) and
+        # per-batch flush reason — the always-on half of the queue-wait
+        # vs compute decomposition (spans are the sampled half)
+        self.obs = obs or NULL_OBS
+        reg = self.obs.registry
+        wait = reg.histogram(
+            "rlc_batcher_queue_wait_seconds",
+            desc="per-request wait from admission to batch flush",
+            unit="s", labelnames=("reason",))
+        flush = reg.counter("rlc_batcher_batches",
+                            desc="flushed batches by reason",
+                            labelnames=("reason",))
+        self._m_wait = {r: wait.labels(reason=r)
+                        for r in ("full", "deadline", "drain")}
+        self._m_flush = {r: flush.labels(reason=r)
+                         for r in ("full", "deadline", "drain")}
+        self._m_coalesced = reg.counter(
+            "rlc_batcher_coalesced",
+            desc="duplicate in-flight requests coalesced").labels()
+        fill = reg.histogram(
+            "rlc_batcher_batch_fill",
+            desc="real requests per flushed batch", unit="1",
+            labelnames=("reason",))
+        self._m_fill = {r: fill.labels(reason=r)
+                        for r in ("full", "deadline", "drain")}
 
     # ------------------------------------------------------------------ #
     def submit(self, s: int, t: int, mr_id: int, mr_len: int,
@@ -117,6 +146,7 @@ class MicroBatcher:
             existing = self._inflight.get(key)
             if existing is not None:
                 self.coalesced += 1
+                self._m_coalesced.inc()
                 # still a natural poll point for every bucket's deadline
                 return existing, self.poll(now)
             req = Request(next(self._ids), key[0], key[1], key[2],
@@ -211,6 +241,12 @@ class MicroBatcher:
             self.batches_deadline += 1
         else:
             self.batches_drain += 1
+        now = self.clock()
+        self._m_flush[reason].inc()
+        self._m_fill[reason].observe(len(reqs))
+        wait_cell = self._m_wait[reason]
+        for r in reqs:
+            wait_cell.observe(now - r.enqueued_at)
         B = self.batch_size
         s = np.empty(B, np.int32)
         t = np.empty(B, np.int32)
@@ -218,4 +254,4 @@ class MicroBatcher:
         for i in range(B):
             r = reqs[min(i, len(reqs) - 1)]  # pad by repeating the first/last
             s[i], t[i], mr[i] = r.s, r.t, r.mr_id
-        return Batch(reqs, s, t, mr, mr_len, reason)
+        return Batch(reqs, s, t, mr, mr_len, reason, flushed_at=now)

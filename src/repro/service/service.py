@@ -23,6 +23,7 @@ from repro.build import BuildStats, build_rlc_index_with_stats
 from repro.core.graph import LabeledGraph
 from repro.core.minimum_repeat import LabelSeq, mr_id_space
 from repro.core.rlc_index import RLCIndex
+from repro.obs import Observability
 
 from .cache import ResultCache
 from .executor import BatchExecutor
@@ -47,16 +48,30 @@ class ServiceConfig:
     #: incremental-build budget for apply_delta (see DeltaBuilder);
     #: 1.0 disables the full-rebuild fallback
     delta_fallback_frac: float = 0.25
+    #: metrics registry on/off (counters and histograms, default-on —
+    #: cheap). Off replaces every cell with the null registry.
+    telemetry: bool = True
+    #: fraction of query_batch calls that record spans (0 = tracing off)
+    trace_sample_rate: float = 0.0
+    #: span buffer bound; past it spans are dropped and counted
+    trace_max_events: int = 50_000
 
 
 class RLCService:
     def __init__(self, graph: LabeledGraph, index: RLCIndex,
                  config: ServiceConfig,
-                 build_stats: Optional[BuildStats] = None):
+                 build_stats: Optional[BuildStats] = None,
+                 obs: Optional[Observability] = None):
         self.graph = graph
         self.index = index
         self.config = config
         self.build_stats = build_stats   # None when the index was adopted
+        # one telemetry context for the whole stack (passed in by build()
+        # so offline build phases land in the same registry)
+        self.obs = obs or Observability(
+            enabled=config.telemetry,
+            trace_sample_rate=config.trace_sample_rate,
+            max_trace_events=config.trace_max_events)
         self.mr_ids = mr_id_space(graph.num_labels, config.k)
         self._id_to_mr: List[LabelSeq] = [
             mr for mr, _ in sorted(self.mr_ids.items(), key=lambda kv: kv[1])]
@@ -71,11 +86,12 @@ class RLCService:
                 self.device_index = None
         self.executor = BatchExecutor(
             index, self.frozen, self.device_index, self._id_to_mr,
-            backend=config.backend)
+            backend=config.backend, obs=self.obs)
         self.cache = ResultCache(config.cache_capacity,
-                                 ttl_s=config.cache_ttl_s)
+                                 ttl_s=config.cache_ttl_s, obs=self.obs)
         self.batcher = MicroBatcher(config.batch_size,
-                                    config.max_wait_ms * 1e-3)
+                                    config.max_wait_ms * 1e-3,
+                                    obs=self.obs)
         self.queries_served = 0
         self.deltas_applied = 0
         self._delta = None          # lazy DeltaBuilder (apply_delta)
@@ -89,14 +105,18 @@ class RLCService:
         """Build (or adopt) the RLC index for ``graph`` and start serving.
         Builds go through the configured :mod:`repro.build` backend."""
         config = config or ServiceConfig()
+        obs = Observability(enabled=config.telemetry,
+                            trace_sample_rate=config.trace_sample_rate,
+                            max_trace_events=config.trace_max_events)
         build_stats = None
         if index is None:
             index, build_stats = build_rlc_index_with_stats(
-                graph, config.k, backend=config.build_backend)
+                graph, config.k, backend=config.build_backend,
+                observer=obs.build_observer())
         elif index.k != config.k:
             raise ValueError(
                 f"index built with k={index.k} but config.k={config.k}")
-        return cls(graph, index, config, build_stats=build_stats)
+        return cls(graph, index, config, build_stats=build_stats, obs=obs)
 
     # -- admission ------------------------------------------------------ #
     def parse(self, constraint: Constraint) -> PathExpression:
@@ -135,18 +155,26 @@ class RLCService:
         # scheduler req_id -> output positions (> 1 when duplicate in-flight
         # queries were coalesced onto one request)
         slot: Dict[int, List[int]] = {}
+        # one sampled trace per query_batch call; None on the unsampled
+        # hot path, so every span below is a single comparison away
+        tr = self.obs.tracer.maybe_trace()
         for i, (s, t, constraint) in enumerate(queries):
+            t0 = tr.tracer._now() if tr is not None else 0.0
             s, t, mr_id, mr_len = self._admit(s, t, constraint)
             hit = self.cache.get((s, t, mr_id))
+            if tr is not None:
+                tr.add(f"admit[{i}]", t0, tr.tracer._now() - t0,
+                       cat="admission", mr_len=mr_len,
+                       cache="hit" if hit is not None else "miss")
             if hit is not None:
                 answers[i] = hit
                 continue
             req, ready = self.batcher.submit(s, t, mr_id, mr_len, now)
             slot.setdefault(req.req_id, []).append(i)
             for batch in ready:
-                self._execute(batch, answers, slot)
+                self._execute(batch, answers, slot, tr)
         for batch in self.batcher.drain():
-            self._execute(batch, answers, slot)
+            self._execute(batch, answers, slot, tr)
         if any(a is None for a in answers):
             # a batch was flushed outside this call (ticker thread or a
             # concurrent query_batch stealing a coalesced key) — fail loud
@@ -158,16 +186,29 @@ class RLCService:
         self.queries_served += len(queries)
         return [bool(a) for a in answers]
 
-    def _run_batch(self, batch: Batch):
+    def _run_batch(self, batch: Batch, tr=None):
         """Produce one answer per real request (overridden by the sharded
         service, which fans the batch out across shards instead)."""
         ans, _backend = self.executor.execute(
-            batch.s, batch.t, batch.mr_id, batch.n_real)
+            batch.s, batch.t, batch.mr_id, batch.n_real, trace=tr)
         return ans
 
     def _execute(self, batch: Batch, answers: List[Optional[bool]],
-                 slot: Dict[int, List[int]]) -> None:
-        for req, val in zip(batch.requests, self._run_batch(batch)):
+                 slot: Dict[int, List[int]], tr=None) -> None:
+        if tr is not None:
+            # queue wait is measured on the scheduler's clock; only the
+            # duration crosses into the tracer's timeline
+            oldest = min(r.enqueued_at for r in batch.requests)
+            tr.add_ending_now("queue_wait",
+                              max(batch.flushed_at - oldest, 0.0),
+                              cat="batcher", reason=batch.reason,
+                              mr_len=batch.mr_len, n=batch.n_real)
+            with tr.span("execute", cat="service",
+                         n=batch.n_real, mr_len=batch.mr_len):
+                vals = self._run_batch(batch, tr)
+        else:
+            vals = self._run_batch(batch)
+        for req, val in zip(batch.requests, vals):
             val = bool(val)
             self.cache.put((req.s, req.t, req.mr_id), val)
             for pos in slot.get(req.req_id, ()):
@@ -201,7 +242,8 @@ class RLCService:
             db = DeltaBuilder(
                 self.graph, self.config.k,
                 backend=self._delta_backend_name(),
-                fallback_frac=self.config.delta_fallback_frac)
+                fallback_frac=self.config.delta_fallback_frac,
+                obs=self.obs)
             db.full()
             if adopted:
                 # may itself clear self._delta (sharded hot_swap), so
@@ -284,6 +326,21 @@ class RLCService:
         return False
 
     # -- observability --------------------------------------------------- #
+    def telemetry_snapshot(self, extra: Optional[dict] = None) -> dict:
+        """Versioned registry+tracer snapshot (``repro.obs.export``)."""
+        ex = dict(extra) if extra else {}
+        ex.setdefault("queries_served", self.queries_served)
+        ex.setdefault("deltas_applied", self.deltas_applied)
+        return self.obs.snapshot(extra=ex)
+
+    def chrome_trace(self) -> dict:
+        """Recorded spans as a Chrome ``trace_event`` JSON object."""
+        return self.obs.chrome_trace()
+
+    def prometheus(self) -> str:
+        """The registry in Prometheus text exposition format."""
+        return self.obs.prometheus()
+
     def stats(self) -> dict:
         """Nested observability snapshot (the bench-JSON shape).
 
@@ -315,4 +372,6 @@ class RLCService:
                 device=self.device_index is not None,
                 row_len=(self.device_index.row_len
                          if self.device_index else None)),
+            telemetry=dict(enabled=self.obs.enabled,
+                           tracing=self.obs.tracer.stats()),
         )

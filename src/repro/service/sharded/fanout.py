@@ -29,6 +29,7 @@ from typing import Dict, List, Tuple
 import numpy as np
 
 from repro.core.rlc_index import merge_join_rows
+from repro.obs import NULL_OBS
 
 from ..metrics import LatencyRecorder
 from ..scheduler import Batch
@@ -50,7 +51,7 @@ def _pad_pow2(vals: List[int], cap: int) -> np.ndarray:
 
 class ScatterGatherExecutor:
     def __init__(self, shards: List[ShardReplicaSet],
-                 router: TwoSidedRouter, batch_size: int):
+                 router: TwoSidedRouter, batch_size: int, obs=None):
         self.shards = shards
         self.router = router
         self.batch_size = batch_size
@@ -60,15 +61,37 @@ class ScatterGatherExecutor:
         self.remote_joins_device = 0
         self.remote_joins_numpy = 0
         self.digest_bytes = 0   # simulated cross-host traffic
+        self.obs = obs or NULL_OBS
+        reg = self.obs.registry
+        sub = reg.histogram(
+            "rlc_fanout_subbatch_seconds",
+            desc="wall time of one per-(shard_s, shard_t) sub-batch",
+            unit="s", labelnames=("path",))
+        self._m_sub = {p: sub.labels(path=p) for p in ("local", "remote")}
+        self._m_digest = reg.counter(
+            "rlc_fanout_digest_bytes",
+            desc="simulated cross-shard digest traffic", unit="By").labels()
+        joins = reg.counter("rlc_fanout_remote_joins",
+                            desc="cross-shard digest joins by path",
+                            labelnames=("path",))
+        self._m_join = {p: joins.labels(path=p)
+                        for p in ("device", "numpy")}
 
     # ------------------------------------------------------------------ #
-    def execute(self, batch: Batch) -> np.ndarray:
-        """Answer every real request of ``batch``, in admission order."""
+    def execute(self, batch: Batch, trace=None) -> np.ndarray:
+        """Answer every real request of ``batch``, in admission order.
+        ``trace``: optional sampled :class:`repro.obs.Trace` — the shard
+        route, each sub-batch, and the digest hand-off get spans."""
         reqs = batch.requests
+        t_route = time.perf_counter()
         groups: Dict[Tuple[int, int], List[int]] = {}
         for q, r in enumerate(reqs):
             route = self.router.route(r.s, r.t)
             groups.setdefault((route.shard_s, route.home), []).append(q)
+        if trace is not None:
+            dt = time.perf_counter() - t_route
+            trace.add("route", trace.tracer._now() - dt, dt, cat="fanout",
+                      n=len(reqs), sub_batches=len(groups))
         answers = np.zeros(len(reqs), dtype=bool)
         for (ss, st), idxs in sorted(groups.items()):
             self.sub_batches[(ss, st)] = self.sub_batches.get((ss, st), 0) + 1
@@ -79,20 +102,29 @@ class ScatterGatherExecutor:
             if ss == st:
                 rep = self.shards[st].acquire()
                 ans, _backend = rep.executor.execute(s, t, mr,
-                                                     n_real=len(idxs))
-                self.recorders["local"].record(
-                    time.perf_counter() - t0, len(idxs))
+                                                     n_real=len(idxs),
+                                                     trace=trace)
+                dt = time.perf_counter() - t0
+                self.recorders["local"].record(dt, len(idxs))
+                self._m_sub["local"].observe(dt)
             else:
-                ans = self._cross_shard(ss, st, s, t, mr, len(idxs))
-                self.recorders["remote"].record(
-                    time.perf_counter() - t0, len(idxs))
+                ans = self._cross_shard(ss, st, s, t, mr, len(idxs),
+                                        trace=trace)
+                dt = time.perf_counter() - t0
+                self.recorders["remote"].record(dt, len(idxs))
+                self._m_sub["remote"].observe(dt)
+            if trace is not None:
+                trace.add(f"sub[{ss}->{st}]", trace.tracer._now() - dt, dt,
+                          cat="fanout", n=len(idxs),
+                          path="local" if ss == st else "remote")
             answers[np.asarray(idxs)] = np.asarray(ans[:len(idxs)],
                                                    dtype=bool)
         return answers
 
     # ------------------------------------------------------------------ #
     def _cross_shard(self, ss: int, st: int, s: np.ndarray, t: np.ndarray,
-                     mr: np.ndarray, n_real: int) -> np.ndarray:
+                     mr: np.ndarray, n_real: int,
+                     trace=None) -> np.ndarray:
         """Digest scatter from shard ``ss`` + merge-join at shard ``st``.
 
         ``s``/``t``/``mr`` are shape-padded; only the first ``n_real``
@@ -106,10 +138,12 @@ class ScatterGatherExecutor:
             try:
                 ans = self._join_device(src, dst, s, t, mr, n_real)
                 self.remote_joins_device += 1
+                self._m_join["device"].inc()
                 return ans[:n_real]
             except Exception:
                 pass    # device trouble: the numpy join always works
         self.remote_joins_numpy += 1
+        self._m_join["numpy"].inc()
         return self._join_numpy(src, dst, s[:n_real], t[:n_real],
                                 mr[:n_real])
 
@@ -131,7 +165,9 @@ class ScatterGatherExecutor:
         # traffic accounting only after the join succeeded (a failure falls
         # back to the numpy join, which does its own counting) — real rows
         # only, padding ships just for the jit shape
-        self.digest_bytes += 2 * n_real * int(oh.shape[1]) * 4
+        nbytes = 2 * n_real * int(oh.shape[1]) * 4
+        self.digest_bytes += nbytes
+        self._m_digest.inc(nbytes)
         return ans
 
     def _join_numpy(self, src: ShardReplica, dst: ShardReplica,
@@ -142,6 +178,7 @@ class ScatterGatherExecutor:
             oh, om = src.frozen.row_out(int(s[q]))     # the digest
             ih, im = dst.frozen.row_in(int(t[q]))
             self.digest_bytes += (oh.nbytes + om.nbytes)
+            self._m_digest.inc(oh.nbytes + om.nbytes)
             out[q] = merge_join_rows(oh, om, ih, im, aid,
                                      int(s[q]), int(t[q]), int(mr[q]))
         return out

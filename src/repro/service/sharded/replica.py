@@ -82,7 +82,7 @@ def build_replica(shard_id: int, replica_id: int, generation: int,
                   backend: str = "auto", use_device: bool = True,
                   device=None,
                   rows: Optional[Tuple[int, int]] = None,
-                  shared_device_index=None) -> ShardReplica:
+                  shared_device_index=None, obs=None) -> ShardReplica:
     """Fully construct one replica (the unit hot-swap publishes).
 
     ``rows=(lo, hi)`` is the shard's vertex range: the device layout packs
@@ -101,7 +101,8 @@ def build_replica(shard_id: int, replica_id: int, generation: int,
                         else build_device_layout(frozen_slice, mr_ids,
                                                  rows=rows, device=device))
     executor = BatchExecutor(index, frozen_slice, device_index,
-                             id_to_mr, backend=backend)
+                             id_to_mr, backend=backend, obs=obs,
+                             shard=str(shard_id))
     return ShardReplica(shard_id, replica_id, generation, frozen_slice,
                         device_index, executor, device)
 
@@ -110,7 +111,7 @@ class ShardReplicaSet:
     """All replicas of one shard; round-robin reads, rolling hot-swap."""
 
     def __init__(self, shard_id: int, lo: int, hi: int,
-                 replicas: List[ShardReplica]):
+                 replicas: List[ShardReplica], obs=None):
         if not replicas:
             raise ValueError(f"shard {shard_id} needs >= 1 replica")
         self.shard_id = shard_id
@@ -121,6 +122,13 @@ class ShardReplicaSet:
         self._swap_lock = threading.Lock()
         self.swaps = 0
         self.last_build_backend: Optional[str] = None
+        self.obs = obs
+        # Executors are rebuilt on every hot-swap, which used to zero their
+        # per-shard fallback counts mid-stream; swap() banks the outgoing
+        # replicas' counts here so attribution survives the generation.
+        self._carried_fallbacks = 0
+        self._carried_batches: dict = {}
+        self._carried_queries: dict = {}
 
     @property
     def num_replicas(self) -> int:
@@ -159,10 +167,40 @@ class ShardReplicaSet:
                     mr_ids, index, id_to_mr, backend=backend,
                     use_device=use_device, device=old.device,
                     rows=(self.lo, self.hi),
-                    shared_device_index=layouts.get(old.device))
+                    shared_device_index=layouts.get(old.device),
+                    obs=self.obs)
+                # bank the outgoing replica's counters before the publish:
+                # the fresh executor starts at zero, the set-level totals
+                # must not
+                self._carried_fallbacks += old.executor.fallbacks
+                for b, rec in old.executor.recorders.items():
+                    if rec.batches:
+                        self._carried_batches[b] = (
+                            self._carried_batches.get(b, 0) + rec.batches)
+                        self._carried_queries[b] = (
+                            self._carried_queries.get(b, 0) + rec.queries)
                 # single reference assignment = the atomic publish point
                 self.replicas[i] = fresh
             self.swaps += 1
+
+    @property
+    def fallbacks(self) -> int:
+        """Fallback batches attributed to this shard across *all*
+        generations: counts banked at swap time plus the live replicas'."""
+        return self._carried_fallbacks + sum(
+            r.executor.fallbacks for r in self.replicas)
+
+    def backend_totals(self) -> dict:
+        """Per-backend ``{batches, queries}`` across generations."""
+        out = {b: dict(batches=n, queries=self._carried_queries.get(b, 0))
+               for b, n in self._carried_batches.items()}
+        for r in self.replicas:
+            for b, rec in r.executor.recorders.items():
+                if rec.batches:
+                    d = out.setdefault(b, dict(batches=0, queries=0))
+                    d["batches"] += rec.batches
+                    d["queries"] += rec.queries
+        return out
 
     def stats(self) -> dict:
         r0 = self.replicas[0]
@@ -175,6 +213,8 @@ class ShardReplicaSet:
             replicas=self.num_replicas,
             generation=self.generation,
             swaps=self.swaps,
+            fallbacks=self.fallbacks,
+            backends=self.backend_totals(),
             build_backend=self.last_build_backend,
             device=r0.device_index is not None,
             row_len=(r0.device_index.row_len

@@ -20,6 +20,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, Tuple
 
+from repro.obs import NULL_OBS
+
 from .plan import ShardPlan
 
 
@@ -42,18 +44,26 @@ class Route:
 class TwoSidedRouter:
     """Maps admitted queries to shard pairs and keeps traffic counters."""
 
-    def __init__(self, plan: ShardPlan):
+    def __init__(self, plan: ShardPlan, obs=None):
         self.plan = plan
         self.local_routes = 0
         self.remote_routes = 0
         self.pair_counts: Dict[Tuple[int, int], int] = {}
+        self.obs = obs or NULL_OBS
+        routes = self.obs.registry.counter(
+            "rlc_router_routes", desc="query routing decisions",
+            labelnames=("kind",))
+        self._m_local = routes.labels(kind="local")
+        self._m_remote = routes.labels(kind="remote")
 
     def route(self, s: int, t: int) -> Route:
         r = Route(self.plan.shard_of(s), self.plan.shard_of(t))
         if r.local:
             self.local_routes += 1
+            self._m_local.inc()
         else:
             self.remote_routes += 1
+            self._m_remote.inc()
         key = (r.shard_s, r.shard_t)
         self.pair_counts[key] = self.pair_counts.get(key, 0) + 1
         return r

@@ -26,6 +26,7 @@ from repro.build import BuildStats, build_rlc_index_with_stats
 from repro.core.graph import LabeledGraph
 from repro.core.minimum_repeat import LabelSeq, mr_id_space
 from repro.core.rlc_index import RLCIndex
+from repro.obs import Observability
 
 from ..cache import ResultCache
 from ..scheduler import Batch, MicroBatcher
@@ -58,11 +59,16 @@ def _shard_devices(num_shards: int) -> List[Optional[object]]:
 class ShardedRLCService:
     def __init__(self, graph: LabeledGraph, index: RLCIndex,
                  config: ShardedServiceConfig,
-                 build_stats: Optional[BuildStats] = None):
+                 build_stats: Optional[BuildStats] = None,
+                 obs: Optional[Observability] = None):
         self.graph = graph
         self.index = index
         self.config = config
         self.build_stats = build_stats   # None when the index was adopted
+        self.obs = obs or Observability(
+            enabled=config.telemetry,
+            trace_sample_rate=config.trace_sample_rate,
+            max_trace_events=config.trace_max_events)
         self.mr_ids = mr_id_space(graph.num_labels, config.k)
         self._id_to_mr: List[LabelSeq] = [
             mr for mr, _ in sorted(self.mr_ids.items(), key=lambda kv: kv[1])]
@@ -82,16 +88,18 @@ class ShardedRLCService:
                               index, self._id_to_mr, backend=config.backend,
                               use_device=config.use_device,
                               device=devices[sid], rows=(lo, hi),
-                              shared_device_index=layout)
+                              shared_device_index=layout, obs=self.obs)
                 for rid in range(config.num_replicas)]
-            self.shards.append(ShardReplicaSet(sid, lo, hi, replicas))
-        self.router = TwoSidedRouter(self.plan)
+            self.shards.append(
+                ShardReplicaSet(sid, lo, hi, replicas, obs=self.obs))
+        self.router = TwoSidedRouter(self.plan, obs=self.obs)
         self.fanout = ScatterGatherExecutor(self.shards, self.router,
-                                            config.batch_size)
+                                            config.batch_size, obs=self.obs)
         self.cache = ResultCache(config.cache_capacity,
-                                 ttl_s=config.cache_ttl_s)
+                                 ttl_s=config.cache_ttl_s, obs=self.obs)
         self.batcher = MicroBatcher(config.batch_size,
-                                    config.max_wait_ms * 1e-3)
+                                    config.max_wait_ms * 1e-3,
+                                    obs=self.obs)
         self.queries_served = 0
         self.deltas_applied = 0
         self._delta = None          # lazy DeltaBuilder (apply_delta)
@@ -105,14 +113,18 @@ class ShardedRLCService:
         """Build (or adopt) the RLC index for ``graph``, shard it, serve.
         Builds go through the configured :mod:`repro.build` backend."""
         config = config or ShardedServiceConfig()
+        obs = Observability(enabled=config.telemetry,
+                            trace_sample_rate=config.trace_sample_rate,
+                            max_trace_events=config.trace_max_events)
         build_stats = None
         if index is None:
             index, build_stats = build_rlc_index_with_stats(
-                graph, config.k, backend=config.build_backend)
+                graph, config.k, backend=config.build_backend,
+                observer=obs.build_observer())
         elif index.k != config.k:
             raise ValueError(
                 f"index built with k={index.k} but config.k={config.k}")
-        return cls(graph, index, config, build_stats=build_stats)
+        return cls(graph, index, config, build_stats=build_stats, obs=obs)
 
     # -- admission + serving loop (shared with RLCService) --------------- #
     # Borrowed unbound: the whole parser -> cache -> micro-batcher ->
@@ -125,6 +137,9 @@ class ShardedRLCService:
     _execute = RLCService._execute
     _delta_backend_name = RLCService._delta_backend_name
     _ensure_delta_builder = RLCService._ensure_delta_builder
+    telemetry_snapshot = RLCService.telemetry_snapshot
+    chrome_trace = RLCService.chrome_trace
+    prometheus = RLCService.prometheus
     close = RLCService.close
     __enter__ = RLCService.__enter__
     __exit__ = RLCService.__exit__
@@ -137,8 +152,8 @@ class ShardedRLCService:
         self.hot_swap(index=db.index)
         self.build_stats = db.stats
 
-    def _run_batch(self, batch: Batch):
-        return self.fanout.execute(batch)
+    def _run_batch(self, batch: Batch, tr=None):
+        return self.fanout.execute(batch, trace=tr)
 
     # -- incremental graph mutation -------------------------------------- #
     def apply_delta(self, delta) -> dict:
@@ -239,7 +254,8 @@ class ShardedRLCService:
                     f"L={self.graph.num_labels})")
             if index is None:
                 index, self.build_stats = build_rlc_index_with_stats(
-                    graph, self.config.k, backend=build_backend)
+                    graph, self.config.k, backend=build_backend,
+                    observer=self.obs.build_observer("swap"))
                 rebuilt = True
             self.graph = graph
         if index is None:
@@ -294,4 +310,6 @@ class ShardedRLCService:
                 num_replicas=self.config.num_replicas,
                 generation=self.generation,
                 plan=self.plan.as_dict()),
+            telemetry=dict(enabled=self.obs.enabled,
+                           tracing=self.obs.tracer.stats()),
         )

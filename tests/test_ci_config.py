@@ -62,7 +62,11 @@ def test_smoke_job_runs_and_uploads_artifacts():
     uploads = [s for s in smoke["steps"]
                if "upload-artifact" in str(s.get("uses", ""))]
     assert uploads, "smoke must upload benchmarks/artifacts"
-    assert "benchmarks/artifacts" in uploads[0]["with"]["path"]
+    path = uploads[0]["with"]["path"]
+    assert "benchmarks/artifacts" in path
+    # the telemetry exports must ride along: JSON snapshots (inside the
+    # suite JSONs + the Chrome trace) and the Prometheus text dump
+    assert "*.json" in path and "*.prom" in path
 
 
 def test_lint_job_uses_checked_in_ruff_config():

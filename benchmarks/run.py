@@ -129,6 +129,19 @@ def validate_telemetry_artifacts(ran):
             if ev["ph"] == "X" and (ev["dur"] < 0 or ev["ts"] < 0):
                 raise ValueError(f"negative ts/dur in {ev}")
 
+    def parallel_speedup_ok(path):
+        with open(path) as f:
+            doc = json.load(f)
+        sp = doc.get("parallel_speedup")
+        if not isinstance(sp, (int, float)) or sp <= 0:
+            raise ValueError(
+                f"missing/invalid parallel_speedup in {path}: {sp!r}")
+        if not doc.get("parallel", {}).get("rows"):
+            raise ValueError(f"no parallel scaling rows in {path}")
+
+    if "build_backends" in ran:
+        check("build_backends:parallel_speedup", lambda: parallel_speedup_ok(
+            os.path.join(ART, "indexing.json")))
     if "service" in ran:
         check("service:telemetry",
               lambda: snapshots_of(os.path.join(ART, "service.json")))

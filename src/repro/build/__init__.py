@@ -9,12 +9,15 @@ Public surface::
 
 Backends (see ``README.md`` in this package for the design):
 
-==========  ============================================================
-``python``  faithful sequential Algorithm 2 — the reference oracle
-``numpy``   hybrid scalar / vectorized bitset waves on label CSR
-``pallas``  hybrid with waves batched through the TPU ``frontier_step``
-            kernels (interpreted on CPU; request explicitly)
-==========  ============================================================
+============  ==========================================================
+``python``    faithful sequential Algorithm 2 — the reference oracle
+``numpy``     hybrid scalar / vectorized bitset waves on label CSR
+``pallas``    hybrid with waves batched through the TPU ``frontier_step``
+              kernels (interpreted on CPU; request explicitly)
+``parallel``  hub-partitioned epoch/merge workers over a list-scheduled
+              phase DAG (``workers=N``; each worker runs the numpy
+              hybrid on a hub-sliced mirror)
+============  ==========================================================
 
 All backends produce bit-identical index entries and pruning counters.
 """
@@ -36,15 +39,18 @@ try:  # jax is optional at import time; the registry entry follows it
 except Exception:  # pragma: no cover - environments without jax
     PallasBackend = None
 
+# multi-worker epoch/merge construction over the phase DAG
+from .parallel import ParallelBackend
+
 # the incremental engine rides on the registered batched backends
 from .delta import DeltaBuilder, DeltaResult, GraphDelta
 
 __all__ = [
     "AUTO_ORDER", "BuildBackend", "BuildStats", "DeltaBuilder",
     "DeltaResult", "GraphDelta", "IndexBuilder", "NumpyBackend",
-    "PallasBackend", "PrunedInserter", "PythonBackend", "access_schedule",
-    "build_rlc_index", "build_rlc_index_with_stats", "get_backend",
-    "list_backends", "register_backend",
+    "PallasBackend", "ParallelBackend", "PrunedInserter", "PythonBackend",
+    "access_schedule", "build_rlc_index", "build_rlc_index_with_stats",
+    "get_backend", "list_backends", "register_backend",
 ]
 
 

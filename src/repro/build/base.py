@@ -43,6 +43,11 @@ class BuildStats:
     pr3_cuts: int = 0
     backend: str = ""
     wall_time_s: float = 0.0
+    #: peak bytes of PR1 coverage mirror(s) held by any one process during
+    #: the build (0 = no mirror: the scalar reference). Metadata, not part
+    #: of counter equality — backends with different mirror layouts are
+    #: still bit-identical in entries/counters.
+    peak_mirror_bytes: int = 0
 
     _COUNTERS = ("kernel_search_states", "kernel_bfs_states", "inserted",
                  "pruned_pr1", "pruned_pr2", "pr3_cuts")

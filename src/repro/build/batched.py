@@ -650,6 +650,8 @@ class PhaseRunner:
                 self.adopted_mirror = True
             else:
                 index.attach_bit_mirror(mr_ids)
+            stats.peak_mirror_bytes = max(stats.peak_mirror_bytes,
+                                          index._mirror.size_bytes())
             self.ctx = _PhaseContext(graph, k, index, stats,
                                      backend._make_engine(graph), mr_ids,
                                      backend.use_pr1, backend.use_pr2,
@@ -708,6 +710,10 @@ class PhaseRunner:
     def finish(self) -> RLCIndex:
         """Detach the construction-time scratch (the coverage mirror is up
         to ``mirror_budget`` bytes — never serve it)."""
+        if self.index._mirror is not None:
+            self.stats.peak_mirror_bytes = max(
+                self.stats.peak_mirror_bytes,
+                self.index._mirror.size_bytes())
         self.index._mirror = None
         self.index._mr_ids = None
         return self.index

@@ -54,6 +54,14 @@ class BitMirror:
     def nbytes(self) -> int:
         return self.out.nbytes + self.in_.nbytes
 
+    def size_bytes(self) -> int:
+        """Allocation footprint of the mirror (both sides). The dense
+        mirror allocates everything up front, so this is also its peak —
+        the number `BuildStats.peak_mirror_bytes` reports and the quantity
+        the hub-sliced worker mirrors (:mod:`repro.build.parallel.mirror`)
+        exist to shrink."""
+        return self.nbytes()
+
     def set1(self, side: np.ndarray, c: int, hub: int, y: int) -> None:
         side[hub, c, y >> 3] |= _BIT[y & 7]
 

@@ -82,6 +82,57 @@ class BuildPhaseObserver:
         elif item > self._slowest[0]:
             heapq.heapreplace(self._slowest, item)
 
+    # -- parallel-build series (created lazily: they only exist when the
+    # -- parallel backend actually ran, so sequential snapshots stay
+    # -- unchanged) ------------------------------------------------------ #
+    def _parallel_cells(self):
+        cells = getattr(self, "_par", None)
+        if cells is None:
+            r, ctx = self.registry, self.context
+            cells = self._par = dict(
+                epochs=r.counter(
+                    "rlc_build_epochs",
+                    desc="parallel build epoch/merge rounds",
+                    labelnames=("context",)).labels(context=ctx),
+                stale=r.counter(
+                    "rlc_build_stale_reruns",
+                    desc="phases re-run after a stale snapshot "
+                         "fingerprint",
+                    labelnames=("context",)).labels(context=ctx),
+                epoch_s=r.histogram(
+                    "rlc_build_epoch_seconds",
+                    desc="wall time of one dispatch+merge epoch",
+                    unit="s", labelnames=("context",)).labels(
+                        context=ctx),
+                worker_s=r.histogram(
+                    "rlc_build_worker_phase_seconds",
+                    desc="committed phase wall time, by the worker "
+                         "that ran it (parent = stale re-run)",
+                    unit="s", labelnames=("context", "worker")),
+                worker_cells={})
+        return cells
+
+    def epoch(self, seconds: float, phases: int = 0,
+              stale_reruns: int = 0) -> None:
+        """One parallel-build epoch boundary: the merged-in view of the
+        per-worker registries (workers report raw phase data; this
+        parent registry is the single snapshot surface)."""
+        cells = self._parallel_cells()
+        cells["epochs"].inc()
+        cells["epoch_s"].observe(seconds)
+        if stale_reruns:
+            cells["stale"].inc(stale_reruns)
+
+    def worker_phase(self, worker: str, seconds: float) -> None:
+        """A committed phase's wall time attributed to the worker that
+        produced it (``"parent"`` for coordinator stale re-runs)."""
+        cells = self._parallel_cells()
+        cell = cells["worker_cells"].get(worker)
+        if cell is None:
+            cell = cells["worker_cells"][worker] = cells[
+                "worker_s"].labels(context=self.context, worker=worker)
+        cell.observe(seconds)
+
     # -- called once per completed build -------------------------------- #
     def build_done(self, backend: str, wall_time_s: float) -> None:
         self._builds.inc(1, context=self.context, backend=backend)

@@ -216,8 +216,11 @@ class RLCService:
 
     # -- incremental graph mutation -------------------------------------- #
     def _delta_backend_name(self) -> str:
+        # "parallel" maps to its sequential batched equivalent: delta
+        # rebuilds touch a dirty phase subset too small to amortize the
+        # epoch/merge protocol
         b = self.config.build_backend
-        return b if b not in ("auto", "python") else "numpy"
+        return b if b not in ("auto", "python", "parallel") else "numpy"
 
     def _make_device_index(self):
         if not self.config.use_device:

@@ -71,11 +71,16 @@ def run(quick: bool = True, smoke: bool = False, k: int = 2) -> Report:
     stream = [pool[i] for i in
               rng.choice(len(pool), size=n_requests, p=weights)]
 
+    # shadow verification rides every serve run: a sample of answered
+    # queries is re-executed against the BiBFS oracle at snapshot time
+    # (off the timed stream); run.py fails the smoke gate on divergence
+    shadow_rate = 0.1 if smoke else 0.02
     results = {}
     for backend in ("sorted", "numpy", "python"):
         svc = RLCService.build(
             g, ServiceConfig(k=k, batch_size=32, max_wait_ms=2.0,
-                             cache_capacity=1024, backend=backend),
+                             cache_capacity=1024, backend=backend,
+                             shadow_sample_rate=shadow_rate),
             index=base.index)
         _warmup(svc, backend)
         lat = run_query_stream(svc, stream, chunk=64)
@@ -108,6 +113,7 @@ def run(quick: bool = True, smoke: bool = False, k: int = 2) -> Report:
             batches_drain=st["scheduler"]["batches_drain"],
         )
         rep.add(**row)
+        svc.audit_report(sample=64)    # embedded via snapshot extra
         results[backend] = dict(row, stats=st,
                                 telemetry=svc.telemetry_snapshot())
 

@@ -64,13 +64,18 @@ def run(quick: bool = True, smoke: bool = False, k: int = 2) -> Report:
     stream = [pool[i] for i in rng.choice(
         len(pool), size=n_requests, p=zipf_weights(len(pool)))]
 
+    # shadow verification rides the per-shard-count serve runs; the
+    # pending checks drain at snapshot time (off the timed stream) and
+    # run.py fails the smoke gate on any divergence
+    shadow_rate = 0.1 if smoke else 0.02
     results = {}
     for S in shard_counts:
         t0 = time.perf_counter()
         svc = ShardedRLCService.build(
             g, ShardedServiceConfig(
                 k=k, batch_size=32, max_wait_ms=2.0, cache_capacity=1024,
-                num_shards=S, num_replicas=num_replicas),
+                num_shards=S, num_replicas=num_replicas,
+                shadow_sample_rate=shadow_rate),
             index=base.index)
         shard_build_s = time.perf_counter() - t0
         lat = run_query_stream(svc, stream, chunk=64)
@@ -95,6 +100,7 @@ def run(quick: bool = True, smoke: bool = False, k: int = 2) -> Report:
             shard_build_s=round(shard_build_s, 3),
         )
         rep.add(**row)
+        svc.audit_report(sample=64)    # embedded via snapshot extra
         results[f"shards_{S}"] = dict(row, stats=st,
                                       telemetry=svc.telemetry_snapshot())
 

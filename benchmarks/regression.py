@@ -1,0 +1,205 @@
+"""Perf-regression gate over the benchmark JSON artifacts.
+
+``benchmarks/baselines.json`` pins the headline numbers of a known-good
+smoke run (distilled by ``python -m benchmarks.regression --update``);
+after each smoke run the gate re-reads the fresh artifacts and compares
+every pinned metric against its baseline with a warn-then-fail
+tolerance ladder:
+
+* within ``warn_ratio`` (default 1.6x worse) — ok;
+* worse than ``warn_ratio`` but within ``fail_ratio`` (default 8x) —
+  warn: printed, recorded in ``artifacts/regression.json``, build
+  passes (smoke boxes are noisy; an 8x cliff is a real regression, a
+  2x wobble on a 300-request run is weather);
+* worse than ``fail_ratio`` — fail: the orchestrator exits non-zero;
+* metric missing from fresh artifacts — fail (a silently dropped
+  benchmark stage must not pass the gate).
+
+Ratios are overridable per run via ``RLC_BENCH_WARN_RATIO`` /
+``RLC_BENCH_FAIL_RATIO`` (CI smoke boxes vs local laptops differ).
+Direction matters: for ``higher``-is-better metrics the worse-ratio is
+``baseline / fresh``; for ``lower``-is-better it is
+``fresh / baseline`` — a *better* fresh number never warns.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional, Tuple
+
+ART = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                   "artifacts")
+BASELINES_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                              "baselines.json")
+BASELINES_SCHEMA = "repro.bench.baselines/1"
+
+DEFAULT_WARN_RATIO = 1.6
+DEFAULT_FAIL_RATIO = 8.0
+
+#: (artifact file, path into its JSON, direction). The headline numbers
+#: of each serving/build suite — few enough to stay below the noise
+#: floor arguments, meaningful enough that an 8x cliff in any of them is
+#: a real regression.
+METRICS: List[Tuple[str, Tuple[str, ...], str]] = [
+    ("service.json", ("results", "sorted", "qps"), "higher"),
+    ("service.json", ("results", "numpy", "qps"), "higher"),
+    ("service.json", ("results", "cache_4096", "hit_rate"), "higher"),
+    ("sharded.json", ("results", "shards_2", "qps"), "higher"),
+    ("sharded.json", ("results", "hot_swap", "swap_s"), "lower"),
+    ("indexing.json", ("aggregate_s", "numpy"), "lower"),
+    ("indexing.json", ("numpy_aggregate_speedup",), "higher"),
+    ("indexing.json", ("parallel_speedup",), "higher"),
+    ("delta.json", ("best_single_speedup",), "higher"),
+]
+
+
+def _metric_id(artifact: str, path: Tuple[str, ...]) -> str:
+    stem = artifact.rsplit(".", 1)[0]
+    return f"{stem}:{'.'.join(path)}"
+
+
+def _dig(doc, path: Tuple[str, ...]):
+    for key in path:
+        if not isinstance(doc, dict) or key not in doc:
+            return None
+        doc = doc[key]
+    return doc
+
+
+def _read_metric(art_dir: str, artifact: str,
+                 path: Tuple[str, ...]) -> Optional[float]:
+    fp = os.path.join(art_dir, artifact)
+    if not os.path.exists(fp):
+        return None
+    with open(fp) as f:
+        doc = json.load(f)
+    v = _dig(doc, path)
+    return float(v) if isinstance(v, (int, float)) else None
+
+
+def distill(art_dir: str = ART) -> dict:
+    """Condense the current artifacts into a committable baselines doc."""
+    metrics = {}
+    for artifact, path, direction in METRICS:
+        v = _read_metric(art_dir, artifact, path)
+        if v is None:
+            continue
+        metrics[_metric_id(artifact, path)] = dict(
+            value=v, direction=direction, artifact=artifact,
+            path=list(path))
+    return dict(schema=BASELINES_SCHEMA, mode="smoke", metrics=metrics)
+
+
+def load_baselines(path: str = BASELINES_PATH) -> Optional[dict]:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != BASELINES_SCHEMA:
+        raise ValueError(
+            f"{path}: expected schema {BASELINES_SCHEMA!r}, "
+            f"got {doc.get('schema')!r}")
+    return doc
+
+
+def compare(art_dir: str, baselines: dict,
+            warn_ratio: Optional[float] = None,
+            fail_ratio: Optional[float] = None) -> dict:
+    """Fresh artifacts vs baselines; returns the verdict document."""
+    warn_ratio = float(os.environ.get("RLC_BENCH_WARN_RATIO",
+                                      warn_ratio or DEFAULT_WARN_RATIO))
+    fail_ratio = float(os.environ.get("RLC_BENCH_FAIL_RATIO",
+                                      fail_ratio or DEFAULT_FAIL_RATIO))
+    rows = []
+    for mid, base in baselines.get("metrics", {}).items():
+        fresh = _read_metric(art_dir, base["artifact"],
+                             tuple(base["path"]))
+        row = dict(metric=mid, direction=base["direction"],
+                   baseline=base["value"], fresh=fresh)
+        if fresh is None:
+            row.update(status="missing",
+                       note="metric absent from fresh artifacts")
+        else:
+            bv, fv = float(base["value"]), float(fresh)
+            if base["direction"] == "higher":
+                worse = bv / fv if fv > 0 else float("inf")
+            else:
+                worse = fv / bv if bv > 0 else float("inf")
+            row["worse_ratio"] = round(worse, 3)
+            row["status"] = ("fail" if worse > fail_ratio
+                             else "warn" if worse > warn_ratio else "ok")
+        rows.append(row)
+    statuses = [r["status"] for r in rows]
+    return dict(
+        schema="repro.bench.regression/1",
+        warn_ratio=warn_ratio, fail_ratio=fail_ratio,
+        metrics=rows,
+        ok=sum(s == "ok" for s in statuses),
+        warned=sum(s == "warn" for s in statuses),
+        failed=sum(s in ("fail", "missing") for s in statuses),
+    )
+
+
+def gate(art_dir: str = ART,
+         baselines_path: str = BASELINES_PATH) -> List[Tuple[str, str]]:
+    """Run the gate after a smoke run; returns orchestrator-format
+    ``(name, error)`` failures (warns print but pass) and writes the
+    verdict to ``artifacts/regression.json``."""
+    baselines = load_baselines(baselines_path)
+    if baselines is None:
+        print(f"regression gate: no baselines at {baselines_path}; "
+              f"run `python -m benchmarks.regression --update` after a "
+              f"known-good smoke run to create them")
+        return []
+    verdict = compare(art_dir, baselines)
+    os.makedirs(art_dir, exist_ok=True)
+    with open(os.path.join(art_dir, "regression.json"), "w") as f:
+        json.dump(verdict, f, indent=2)
+    failures = []
+    for row in verdict["metrics"]:
+        if row["status"] == "ok":
+            continue
+        msg = (f"{row['metric']}: baseline={row['baseline']:g} "
+               f"fresh={row['fresh'] if row['fresh'] is None else round(row['fresh'], 4)} "
+               f"({row.get('worse_ratio', '-')}x worse, "
+               f"{row['direction']}-is-better)")
+        if row["status"] == "warn":
+            print(f"regression gate WARN {msg}")
+        else:
+            print(f"regression gate FAIL {msg}")
+            failures.append((f"regression:{row['metric']}",
+                             row.get("note", msg)))
+    print(f"regression gate: {verdict['ok']} ok, "
+          f"{verdict['warned']} warned, {verdict['failed']} failed "
+          f"(warn>{verdict['warn_ratio']}x, fail>{verdict['fail_ratio']}x)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.regression",
+        description="compare bench artifacts against pinned baselines")
+    ap.add_argument("--update", action="store_true",
+                    help="re-distill baselines.json from the current "
+                         "artifacts instead of gating")
+    ap.add_argument("--art-dir", default=ART)
+    args = ap.parse_args(argv)
+    if args.update:
+        doc = distill(args.art_dir)
+        if not doc["metrics"]:
+            print(f"no gateable metrics found in {args.art_dir}; run the "
+                  f"benchmarks first")
+            return 1
+        with open(BASELINES_PATH, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        print(f"wrote {BASELINES_PATH} ({len(doc['metrics'])} metrics)")
+        return 0
+    failures = gate(args.art_dir)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -80,6 +80,9 @@ def main(argv=None):
             traceback.print_exc()
             failures.append((name, repr(e)))
     failures.extend(validate_telemetry_artifacts(ran))
+    if smoke and not args.only:
+        from .regression import gate
+        failures.extend(gate(ART))
     if failures:
         print("\nFAILED suites:", failures)
         sys.exit(1)
@@ -89,12 +92,14 @@ def main(argv=None):
 def validate_telemetry_artifacts(ran):
     """Check the telemetry the serving suites just emitted: every snapshot
     embedded in their JSON artifacts must parse against the versioned
-    schema, and the Chrome trace dump must be well-formed. Runs only for
-    the suites that actually executed; returns ``(name, error)`` failure
-    tuples in the orchestrator's format."""
+    schema, the Chrome trace dump must be well-formed, every embedded
+    index-health audit report must validate (and is consolidated into
+    ``artifacts/audit.json``), and the shadow verifier must report zero
+    divergences. Runs only for the suites that actually executed; returns
+    ``(name, error)`` failure tuples in the orchestrator's format."""
     import json
 
-    from repro.obs import validate_snapshot
+    from repro.obs import validate_audit_report, validate_snapshot
 
     failures = []
 
@@ -139,17 +144,55 @@ def validate_telemetry_artifacts(ran):
         if not doc.get("parallel", {}).get("rows"):
             raise ValueError(f"no parallel scaling rows in {path}")
 
+    audits = {}
+
+    def _walk_extras(doc):
+        """Every snapshot ``extra`` section embedded in a bench JSON."""
+        if isinstance(doc, dict):
+            if doc.get("schema") == "repro.obs/1" and "extra" in doc:
+                yield doc["extra"]
+            else:
+                for v in doc.values():
+                    yield from _walk_extras(v)
+        elif isinstance(doc, list):
+            for v in doc:
+                yield from _walk_extras(v)
+
+    def audits_and_shadow_of(name, path):
+        with open(path) as f:
+            doc = json.load(f)
+        found = []
+        for extra in _walk_extras(doc):
+            audit = extra.get("audit")
+            if audit is not None:
+                validate_audit_report(audit)
+                found.append(audit)
+            shadow = extra.get("shadow")
+            if shadow is not None and shadow.get("divergent", 0) != 0:
+                raise ValueError(
+                    f"shadow verifier diverged in {path}: {shadow}")
+        if not found:
+            raise ValueError(f"no audit reports embedded in {path}")
+        audits[name] = found
+
     if "build_backends" in ran:
         check("build_backends:parallel_speedup", lambda: parallel_speedup_ok(
             os.path.join(ART, "indexing.json")))
     if "service" in ran:
         check("service:telemetry",
               lambda: snapshots_of(os.path.join(ART, "service.json")))
+        check("service:audit", lambda: audits_and_shadow_of(
+            "service", os.path.join(ART, "service.json")))
     if "sharded" in ran:
         check("sharded:telemetry",
               lambda: snapshots_of(os.path.join(ART, "sharded.json")))
         check("sharded:trace", lambda: chrome_trace_ok(
             os.path.join(ART, "sharded_trace.json")))
+        check("sharded:audit", lambda: audits_and_shadow_of(
+            "sharded", os.path.join(ART, "sharded.json")))
+    if audits:
+        with open(os.path.join(ART, "audit.json"), "w") as f:
+            json.dump(dict(suites=audits), f, indent=2)
     return failures
 
 

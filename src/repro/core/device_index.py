@@ -136,6 +136,27 @@ class DeviceIndex:
         return bool(self.query_batch(np.array([s]), np.array([t]),
                                      np.array([c]))[0])
 
+    def explain_batch(self, s: np.ndarray, t: np.ndarray, mr: np.ndarray,
+                      max_hubs: int = 8) -> list:
+        """Witness mode for the device join path: per query, the
+        derivation over exactly the padded row digests the kernels join
+        (gathered host-side, PAD slots dropped). Device rows carry no
+        access-id table, so join hubs report ``aid: null`` and sort by
+        vertex id; row lengths reflect the ``row_len`` truncation the
+        device layout actually serves with."""
+        from repro.obs.explain import explain_rows
+        s = np.asarray(s)
+        t = np.asarray(t)
+        mr = np.asarray(mr)
+        oh, om = self.gather_out_rows(s)
+        ih, im = self.gather_in_rows(t)
+        oh, om = np.asarray(oh), np.asarray(om)
+        ih, im = np.asarray(ih), np.asarray(im)
+        return [explain_rows(oh[q], om[q], ih[q], im[q],
+                             int(s[q]), int(t[q]), int(mr[q]),
+                             pad=PAD, max_hubs=max_hubs)
+                for q in range(len(s))]
+
     # -- shard scatter/gather helpers -------------------------------------- #
     def gather_out_rows(self, s: np.ndarray) -> Tuple[jax.Array, jax.Array]:
         """Padded ``(Q, E)`` out-row digests for a batch of source vertices

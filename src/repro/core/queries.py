@@ -53,6 +53,39 @@ def generate_queries(g: LabeledGraph, k: int, n_true: int = 1000,
     return QuerySet(tq, fq)
 
 
+def sample_index_queries(frozen, id_to_mr, n: int = 64, seed: int = 0
+                         ) -> List[Tuple[int, int, LabelSeq]]:
+    """Sample ``(s, t, L)`` queries straight from a frozen index's entries.
+
+    Every entry is a reachability fact — ``(h, c)`` at out-row ``v``
+    witnesses ``v ~~mr_c^+~~> h``, and symmetrically on the in side — so
+    each sampled entry yields a query the index *must* answer ``True``.
+    The index-health auditor (:mod:`repro.obs.audit`) replays these
+    against the BiBFS oracle as soundness probes, and they double as a
+    hot-row-biased warm set (entry-dense rows are sampled more often),
+    the shape the ROADMAP item-5 cache warmers want.
+    """
+    rng = np.random.default_rng(seed)
+    out_n, in_n = len(frozen.out_hub), len(frozen.in_hub)
+    total = out_n + in_n
+    if total == 0:
+        return []
+    out: List[Tuple[int, int, LabelSeq]] = []
+    for e in rng.integers(total, size=n).tolist():
+        if e < out_n:
+            v = int(np.searchsorted(frozen.out_indptr, e, "right")) - 1
+            hub = int(frozen.out_hub[e])
+            L = tuple(id_to_mr[int(frozen.out_mr[e])])
+            out.append((v, hub, L))
+        else:
+            e -= out_n
+            v = int(np.searchsorted(frozen.in_indptr, e, "right")) - 1
+            hub = int(frozen.in_hub[e])
+            L = tuple(id_to_mr[int(frozen.in_mr[e])])
+            out.append((hub, v, L))
+    return out
+
+
 def biased_true_queries(g: LabeledGraph, k: int, n: int, seed: int = 0,
                         n_false: Optional[int] = None) -> QuerySet:
     """Seed true queries from short random walks so dense true sets exist

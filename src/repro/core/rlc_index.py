@@ -223,6 +223,28 @@ class RLCIndex:
                         return True
         return False
 
+    def explain(self, s: int, t: int, L: Sequence[int],
+                mr_id: Optional[int] = None, max_hubs: int = 8) -> dict:
+        """Witness-mode Algorithm 1 over the dict layout: the same
+        Case-2 / Case-1 decision as :meth:`query`, but returning the
+        derivation (see :mod:`repro.obs.explain`). ``mr_id`` only stamps
+        the witness — the dict layout joins on MR tuples."""
+        from repro.obs.explain import build_witness
+        L = tuple(L)
+        if mr_id is None and self._mr_ids is not None:
+            mr_id = self._mr_ids.get(L)
+        return build_witness(
+            s, t, mr_id,
+            case2_out=self.has_out(s, t, L),
+            case2_in=self.has_in(t, s, L),
+            out_row=sum(len(ms) for ms in self.l_out[s].values()),
+            in_row=sum(len(ms) for ms in self.l_in[t].values()),
+            out_candidates=[h for h, ms in self.l_out[s].items()
+                            if L in ms],
+            in_candidates=[h for h, ms in self.l_in[t].items()
+                           if L in ms],
+            aid=self.aid, max_hubs=max_hubs)
+
     # -- vectorized PR1 batch query (Algorithm 2 insert-side) -------------- #
     def pr1_cover_out(self, hub: int, mr: LabelSeq) -> np.ndarray:
         """Packed bitset over ``y`` of ``Query(y, hub, mr^+)`` — the PR1
@@ -440,12 +462,26 @@ class FrozenRLCIndex:
         ih, im = self.row_in(t)
         return merge_join_rows(oh, om, ih, im, self.aid, s, t, mr_id)
 
+    def explain(self, s: int, t: int, mr_id: int,
+                max_hubs: int = 8) -> dict:
+        """Witness-mode :meth:`query`: the derivation Algorithm 1's
+        merge join performs over this layout's two CSR rows (see
+        :mod:`repro.obs.explain` for the witness shape)."""
+        from repro.obs.explain import explain_rows
+        oh, om = self.row_out(int(s))
+        ih, im = self.row_in(int(t))
+        return explain_rows(oh, om, ih, im, int(s), int(t), int(mr_id),
+                            aid=self.aid, max_hubs=max_hubs)
+
     def query_batch(self, s: Sequence[int], t: Sequence[int],
-                    mr_id: Sequence[int]) -> np.ndarray:
+                    mr_id: Sequence[int], witness: bool = False):
         """Vectorized-per-query Algorithm 1 over the flat numpy layout.
 
         The frozen-numpy serving backend: no device transfer, no padding —
-        each query touches only its two CSR rows.
+        each query touches only its two CSR rows. With ``witness=True``
+        returns ``(answers, witnesses)`` — one :meth:`explain` record per
+        query — instead of the bare answer array (opt-in: the witness
+        walk is strictly more work than the merge join).
         """
         s = np.asarray(s)
         t = np.asarray(t)
@@ -453,6 +489,10 @@ class FrozenRLCIndex:
         out = np.zeros(len(s), dtype=bool)
         for q in range(len(s)):
             out[q] = self.query(int(s[q]), int(t[q]), int(mr_id[q]))
+        if witness:
+            ws = [self.explain(int(s[q]), int(t[q]), int(mr_id[q]))
+                  for q in range(len(s))]
+            return out, ws
         return out
 
     @property

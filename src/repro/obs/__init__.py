@@ -19,6 +19,14 @@ ad-hoc ``stats()`` dicts:
 * :mod:`repro.obs.build_obs` — per-(hub, direction) phase timings and
   pruning-counter deltas for the Algorithm 2 backends and the delta
   engine.
+* :mod:`repro.obs.explain` — witness-mode query derivations (the
+  ``RLCService.explain`` EXPLAIN bundles) with oracle replay and
+  entry re-verification helpers.
+* :mod:`repro.obs.audit` — the index-health auditor: versioned reports
+  over a live index (histograms, redundancy/soundness re-verification,
+  byte accounting, drift fingerprints).
+* :mod:`repro.obs.shadow` — continuous shadow verification: sampled
+  re-execution of served answers against the BiBFS oracle.
 
 :class:`Observability` bundles one registry + one tracer; services own
 one instance (``RLCService.obs``) created from their config. Counters
@@ -30,18 +38,28 @@ from __future__ import annotations
 
 from typing import Optional
 
+from .audit import (AUDIT_SCHEMA, audit_index, bank_audit_metrics,
+                    fingerprint, validate_audit_report)
 from .build_obs import BuildPhaseObserver
-from .export import SCHEMA, snapshot, to_prometheus, validate_snapshot
+from .explain import (WITNESS_SCHEMA, build_witness, explain_rows,
+                      replay_witness, verify_witness_entries)
+from .export import (SCHEMA, snapshot, snapshot_to_prometheus,
+                     to_prometheus, validate_snapshot)
 from .metrics import (NULL_REGISTRY, Counter, Gauge, Histogram, Metric,
                       MetricsRegistry, NullRegistry, Reservoir)
+from .shadow import ShadowVerifier, attach_shadow
 from .tracing import SpanEvent, Trace, Tracer, span_tree
 
 __all__ = [
-    "SCHEMA", "BuildPhaseObserver", "Counter", "Gauge", "Histogram",
-    "Metric", "MetricsRegistry", "NullRegistry", "NULL_REGISTRY",
-    "Observability", "NULL_OBS", "Reservoir", "SpanEvent", "Trace",
-    "Tracer", "snapshot", "span_tree", "to_prometheus",
-    "validate_snapshot",
+    "AUDIT_SCHEMA", "SCHEMA", "WITNESS_SCHEMA", "BuildPhaseObserver",
+    "Counter", "Gauge", "Histogram", "Metric", "MetricsRegistry",
+    "NullRegistry", "NULL_REGISTRY", "Observability", "NULL_OBS",
+    "Reservoir", "ShadowVerifier", "SpanEvent", "Trace", "Tracer",
+    "attach_shadow", "audit_index", "bank_audit_metrics",
+    "build_witness", "explain_rows", "fingerprint", "replay_witness",
+    "snapshot", "snapshot_to_prometheus", "span_tree", "to_prometheus",
+    "validate_snapshot", "validate_audit_report",
+    "verify_witness_entries",
 ]
 
 

@@ -34,10 +34,12 @@ plus ``_sum`` / ``_count``).
 """
 from __future__ import annotations
 
+import math
 import re
 from typing import Optional
 
-__all__ = ["SCHEMA", "snapshot", "validate_snapshot", "to_prometheus"]
+__all__ = ["SCHEMA", "snapshot", "validate_snapshot", "to_prometheus",
+           "snapshot_to_prometheus"]
 
 SCHEMA = "repro.obs/1"
 
@@ -102,15 +104,34 @@ def validate_snapshot(doc: dict) -> dict:
                 if missing:
                     fail(sp, f"histogram series missing {sorted(missing)}")
                 for k in ("sum", "min", "max", "p50", "p90", "p99"):
-                    if not isinstance(s[k], (int, float)):
-                        fail(f"{sp}.{k}", "expected number")
-                if not isinstance(s["count"], int) or s["count"] < 0:
-                    fail(f"{sp}.count", "expected non-negative int")
+                    v = s[k]
+                    # bools are ints in python; NaN/inf serialize to
+                    # invalid JSON and poison downstream aggregation —
+                    # reject both, not just non-numbers
+                    if isinstance(v, bool) or not isinstance(
+                            v, (int, float)) or not math.isfinite(v):
+                        fail(f"{sp}.{k}", f"expected finite number, "
+                             f"got {v!r}")
+                for k in ("count", "stored"):
+                    v = s[k]
+                    if isinstance(v, bool) or not isinstance(v, int) \
+                            or v < 0:
+                        fail(f"{sp}.{k}",
+                             f"expected non-negative int, got {v!r}")
                 if s["stored"] > s["count"]:
                     fail(f"{sp}.stored", "stored exceeds count")
+                if s["count"] >= 1 and s["stored"] == 0:
+                    # a reservoir that observed anything keeps at least
+                    # one sample; count>0/stored==0 means the series was
+                    # assembled by hand or the reservoir was clobbered
+                    fail(f"{sp}.stored",
+                         "count >= 1 but no stored samples")
             else:
-                if not isinstance(s.get("value"), (int, float)):
-                    fail(f"{sp}.value", "expected number")
+                v = s.get("value")
+                if isinstance(v, bool) or not isinstance(
+                        v, (int, float)) or not math.isfinite(v):
+                    fail(f"{sp}.value",
+                         f"expected finite number, got {v!r}")
     tracing = doc.get("tracing")
     if tracing is not None:
         if not isinstance(tracing, dict):
@@ -165,4 +186,42 @@ def to_prometheus(registry) -> str:
                 lines.append(f"{pname}_count{_prom_labels(lab)} {r.count}")
             else:
                 lines.append(f"{pname}{_prom_labels(lab)} {cell.value:g}")
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+def snapshot_to_prometheus(doc: dict) -> str:
+    """Render a ``repro.obs/1`` snapshot *document* as Prometheus text.
+
+    The offline twin of :func:`to_prometheus`: same exposition rules
+    (counters get ``_total``, histograms export as summaries), but fed
+    from a serialized snapshot instead of a live registry — the
+    ``python -m repro.obs prom`` path that converts an archived bench
+    artifact without rebuilding the service that produced it. The doc
+    is validated first, so malformed artifacts fail loudly.
+    """
+    validate_snapshot(doc)
+    lines = []
+    for name, m in sorted(doc["metrics"].items()):
+        pname = _prom_name(name)
+        if m["type"] == "counter":
+            pname += "_total"
+        ptype = "summary" if m["type"] == "histogram" else m["type"]
+        if m.get("desc"):
+            lines.append(f"# HELP {pname} {m['desc']}")
+        lines.append(f"# TYPE {pname} {ptype}")
+        for s in m["series"]:
+            lab = s["labels"]
+            if m["type"] == "histogram":
+                for q, k in (("0.5", "p50"), ("0.9", "p90"),
+                             ("0.99", "p99")):
+                    lines.append(
+                        f"{pname}{_prom_labels(lab, {'quantile': q})} "
+                        f"{s[k]:g}")
+                lines.append(f"{pname}_sum{_prom_labels(lab)} "
+                             f"{s['sum']:g}")
+                lines.append(f"{pname}_count{_prom_labels(lab)} "
+                             f"{s['count']}")
+            else:
+                lines.append(
+                    f"{pname}{_prom_labels(lab)} {s['value']:g}")
     return "\n".join(lines) + ("\n" if lines else "")

@@ -115,6 +115,21 @@ class ResultCache:
         self._m_hit.inc()
         return val
 
+    def peek(self, key: Key) -> Optional[bool]:
+        """Non-mutating probe: the cached answer if present and fresh,
+        else ``None``. No recency refresh, no stats, no counters —
+        EXPLAIN's cache-disposition probe must not perturb the serving
+        LRU or the hit-rate series it reports on."""
+        if self.capacity == 0:
+            return None
+        pair = self._d.get(key)
+        if pair is None:
+            return None
+        val, stamp = pair
+        if self.ttl_s is not None and self.clock() - stamp >= self.ttl_s:
+            return None
+        return val
+
     def put(self, key: Key, value: bool) -> None:
         if self.capacity == 0:
             return

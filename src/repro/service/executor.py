@@ -164,6 +164,44 @@ class BatchExecutor:
         raise ExecutorError(
             f"all backends failed for batch of {n} queries") from last_err
 
+    def explain_batch(self, s: np.ndarray, t: np.ndarray,
+                      mr_id: np.ndarray, n_real: Optional[int] = None,
+                      backend: Optional[str] = None,
+                      max_hubs: int = 8) -> Tuple[list, str]:
+        """Witness mode of :meth:`execute`: per-query derivations instead
+        of bare booleans; returns ``(witnesses[:n_real], backend)``.
+
+        The backend is resolved with the same chain as ``execute`` so the
+        witness reflects the layout the serving path would actually join
+        — device backends explain over the padded/truncated device rows,
+        ``numpy`` over the frozen CSR, ``python`` over the dict layout.
+        Device failures degrade the same way the serving path does.
+        """
+        first = self.resolve(backend)
+        n = len(s) if n_real is None else int(n_real)
+        if first in ("pallas", "sorted") and self.device_index is not None:
+            try:
+                ws = self.device_index.explain_batch(s[:n], t[:n],
+                                                     mr_id[:n],
+                                                     max_hubs=max_hubs)
+                return ws, first
+            except Exception:  # noqa: BLE001 — degrade like execute()
+                pass
+        if self.frozen is not None:
+            ws = [self.frozen.explain(int(s[q]), int(t[q]),
+                                      int(mr_id[q]), max_hubs=max_hubs)
+                  for q in range(n)]
+            return ws, "numpy"
+        if self.id_to_mr is None:
+            raise ExecutorError("no backend can explain this batch")
+        ws = []
+        for q in range(n):
+            mr = self.id_to_mr[int(mr_id[q])]
+            ws.append(self.index.explain(int(s[q]), int(t[q]), mr,
+                                         mr_id=int(mr_id[q]),
+                                         max_hubs=max_hubs))
+        return ws, "python"
+
     def _run(self, backend: str, s, t, mr_id, n: int) -> np.ndarray:
         # Padding only exists to keep a static jit shape for the device
         # backends; the per-query loop backends skip the padded slots.

@@ -182,6 +182,13 @@ class MicroBatcher:
         with self._lock:
             return sum(len(b) for b in self._buckets.values())
 
+    def is_inflight(self, key: Tuple[int, int, int]) -> bool:
+        """Whether ``(s, t, mr_id)`` is queued awaiting a flush — i.e. a
+        duplicate submitted now would coalesce. Read-only (EXPLAIN's
+        coalescing disposition; never takes a batch slot)."""
+        with self._lock:
+            return tuple(int(x) for x in key) in self._inflight
+
     # -- background deadline ticker ------------------------------------- #
     def start_ticker(self, on_batch: Callable[[Batch], None],
                      interval_s: Optional[float] = None) -> None:

@@ -55,6 +55,14 @@ class ServiceConfig:
     trace_sample_rate: float = 0.0
     #: span buffer bound; past it spans are dropped and counted
     trace_max_events: int = 50_000
+    #: fraction of answered queries re-executed against the BiBFS oracle
+    #: by the shadow verifier (0 = shadow verification off)
+    shadow_sample_rate: float = 0.0
+    #: shadow queue bound; past it the oldest pending check is dropped
+    shadow_max_pending: int = 1024
+    #: run shadow checks on a background thread (else they run when
+    #: drained explicitly or at snapshot time)
+    shadow_background: bool = False
 
 
 class RLCService:
@@ -96,6 +104,13 @@ class RLCService:
         self.deltas_applied = 0
         self._delta = None          # lazy DeltaBuilder (apply_delta)
         self._closed = False
+        self._last_audit = None     # most recent audit_report() document
+        self._m_explain = self.obs.registry.counter(
+            "rlc_explain_requests",
+            desc="EXPLAIN bundles produced, by witness kind",
+            labelnames=("kind",))
+        from repro.obs.shadow import attach_shadow
+        self._shadow = attach_shadow(self)
 
     # ------------------------------------------------------------------ #
     @classmethod
@@ -152,6 +167,10 @@ class RLCService:
         arrival trace); defaults to the scheduler's clock per admission.
         """
         answers: List[Optional[bool]] = [None] * len(queries)
+        # canonical (s, t, mr_id) per position, kept only when the shadow
+        # verifier wants to sample answered queries afterwards
+        keys: Optional[List[Tuple[int, int, int]]] = (
+            [None] * len(queries) if self._shadow is not None else None)
         # scheduler req_id -> output positions (> 1 when duplicate in-flight
         # queries were coalesced onto one request)
         slot: Dict[int, List[int]] = {}
@@ -161,6 +180,8 @@ class RLCService:
         for i, (s, t, constraint) in enumerate(queries):
             t0 = tr.tracer._now() if tr is not None else 0.0
             s, t, mr_id, mr_len = self._admit(s, t, constraint)
+            if keys is not None:
+                keys[i] = (s, t, mr_id)
             hit = self.cache.get((s, t, mr_id))
             if tr is not None:
                 tr.add(f"admit[{i}]", t0, tr.tracer._now() - t0,
@@ -184,7 +205,11 @@ class RLCService:
                 "share a ticker-driven or concurrent MicroBatcher with "
                 "synchronous query_batch")
         self.queries_served += len(queries)
-        return [bool(a) for a in answers]
+        out = [bool(a) for a in answers]
+        if keys is not None:
+            for (s, t, mr_id), ans in zip(keys, out):
+                self._shadow.offer(s, t, mr_id, ans)
+        return out
 
     def _run_batch(self, batch: Batch, tr=None):
         """Produce one answer per real request (overridden by the sharded
@@ -213,6 +238,53 @@ class RLCService:
             self.cache.put((req.s, req.t, req.mr_id), val)
             for pos in slot.get(req.req_id, ()):
                 answers[pos] = val
+
+    # -- EXPLAIN / provenance -------------------------------------------- #
+    def explain(self, s: int, t: int, constraint: Constraint,
+                max_hubs: int = 8) -> dict:
+        """Answer ``(s, t, constraint)`` with its full derivation.
+
+        The bundle carries the witness the serving join path would
+        produce (``repro.obs.witness/1``: Case-2 entries / Case-1 join
+        hubs for positives, the ruling-out fact for negatives), which
+        backend explained it, and the *disposition* the query would get
+        right now — whether the answer is sitting in the result cache
+        and whether an identical key is in-flight in the micro-batcher.
+        Read-only: no cache mutation, no batch slot, no served-query
+        accounting; when a trace is sampled it lands as one ``explain``
+        span.
+        """
+        tr = self.obs.tracer.maybe_trace()
+        t0 = tr.tracer._now() if tr is not None else 0.0
+        s, t, mr_id, _mr_len = self._admit(s, t, constraint)
+        key = (s, t, mr_id)
+        bundle = self._explain_admitted(s, t, mr_id, max_hubs=max_hubs)
+        cached = self.cache.peek(key)
+        bundle.update(
+            s=s, t=t, mr_id=mr_id, mr=list(self._id_to_mr[mr_id]),
+            cache=dict(
+                disposition="hit" if cached is not None else "miss",
+                answer=cached),
+            coalesced=self.batcher.is_inflight(key))
+        kind = bundle["witness"].get("kind", "unknown")
+        if tr is not None:
+            tr.add("explain", t0, tr.tracer._now() - t0, cat="explain",
+                   answer=bundle["answer"], backend=bundle["backend"],
+                   kind=kind)
+        self._m_explain.labels(kind=kind).inc()
+        return bundle
+
+    def _explain_admitted(self, s: int, t: int, mr_id: int,
+                          max_hubs: int = 8) -> dict:
+        """Backend dispatch for one admitted query (single-host: the
+        executor's chain; overridden by the sharded service to add
+        routing hops)."""
+        import numpy as np
+        ws, backend = self.executor.explain_batch(
+            np.array([s]), np.array([t]), np.array([mr_id]),
+            max_hubs=max_hubs)
+        return dict(answer=ws[0]["answer"], backend=backend,
+                    witness=ws[0])
 
     # -- incremental graph mutation -------------------------------------- #
     def _delta_backend_name(self) -> str:
@@ -306,6 +378,11 @@ class RLCService:
                 dirty_s=set(res.dirty_out.tolist()),
                 dirty_t=set(res.dirty_in.tolist()))
         self.deltas_applied += 1
+        if self._shadow is not None:
+            # pending checks were served by the pre-delta index; the
+            # oracle now walks the mutated graph, so they'd diverge
+            # spuriously
+            self._shadow.discard_pending()
         return dict(delta=res.as_dict(), cache_evicted=evicted,
                     dirty_out=res.dirty_out.tolist(),
                     dirty_in=res.dirty_in.tolist(),
@@ -320,6 +397,8 @@ class RLCService:
             return
         self._closed = True
         self.batcher.stop_ticker()
+        if self._shadow is not None:
+            self._shadow.stop()
 
     def __enter__(self) -> "RLCService":
         return self
@@ -329,11 +408,36 @@ class RLCService:
         return False
 
     # -- observability --------------------------------------------------- #
+    def audit_report(self, sample: int = 128, seed: int = 0) -> dict:
+        """Walk the serving index and return a ``repro.obs.audit/1``
+        health report (entry histograms, redundancy/soundness probes,
+        byte accounting, drift fingerprint). The report is kept for the
+        next :meth:`telemetry_snapshot` and its headline numbers are
+        banked as ``rlc_audit_*`` gauges."""
+        from repro.obs.audit import audit_index, bank_audit_metrics
+        rep = audit_index(self.frozen, self._id_to_mr, index=self.index,
+                          graph=self.graph,
+                          device_index=self.device_index,
+                          sample=sample, seed=seed)
+        self._last_audit = rep
+        bank_audit_metrics(self.obs.registry, rep)
+        return rep
+
+    def drain_shadow(self) -> int:
+        """Run every pending shadow check now (foreground); returns the
+        number checked. No-op (0) when shadow verification is off."""
+        return self._shadow.drain() if self._shadow is not None else 0
+
     def telemetry_snapshot(self, extra: Optional[dict] = None) -> dict:
         """Versioned registry+tracer snapshot (``repro.obs.export``)."""
         ex = dict(extra) if extra else {}
         ex.setdefault("queries_served", self.queries_served)
         ex.setdefault("deltas_applied", self.deltas_applied)
+        if self._shadow is not None:
+            self._shadow.drain()
+            ex.setdefault("shadow", self._shadow.stats())
+        if self._last_audit is not None:
+            ex.setdefault("audit", self._last_audit)
         return self.obs.snapshot(extra=ex)
 
     def chrome_trace(self) -> dict:
@@ -377,4 +481,6 @@ class RLCService:
                          if self.device_index else None)),
             telemetry=dict(enabled=self.obs.enabled,
                            tracing=self.obs.tracer.stats()),
+            shadow=(self._shadow.stats()
+                    if self._shadow is not None else None),
         )

@@ -104,6 +104,13 @@ class ShardedRLCService:
         self.deltas_applied = 0
         self._delta = None          # lazy DeltaBuilder (apply_delta)
         self._closed = False
+        self._last_audit = None     # most recent audit_report() document
+        self._m_explain = self.obs.registry.counter(
+            "rlc_explain_requests",
+            desc="EXPLAIN bundles produced, by witness kind",
+            labelnames=("kind",))
+        from repro.obs.shadow import attach_shadow
+        self._shadow = attach_shadow(self)
 
     # ------------------------------------------------------------------ #
     @classmethod
@@ -137,6 +144,8 @@ class ShardedRLCService:
     _execute = RLCService._execute
     _delta_backend_name = RLCService._delta_backend_name
     _ensure_delta_builder = RLCService._ensure_delta_builder
+    explain = RLCService.explain
+    drain_shadow = RLCService.drain_shadow
     telemetry_snapshot = RLCService.telemetry_snapshot
     chrome_trace = RLCService.chrome_trace
     prometheus = RLCService.prometheus
@@ -154,6 +163,41 @@ class ShardedRLCService:
 
     def _run_batch(self, batch: Batch, tr=None):
         return self.fanout.execute(batch, trace=tr)
+
+    def _explain_admitted(self, s: int, t: int, mr_id: int,
+                          max_hubs: int = 8) -> dict:
+        """Sharded backend dispatch for one admitted query, with the
+        routing hops attached: which shards own ``s``/``t``, whether the
+        join ran on one shard or joined a shipped out-row digest against
+        the remote in-row, and what that digest weighed. Uses
+        :meth:`ShardPlan.shard_of` directly (not the router) so EXPLAIN
+        never skews the routing counters."""
+        shard_s = self.plan.shard_of(s)
+        shard_t = self.plan.shard_of(t)
+        route = dict(shard_s=shard_s, shard_t=shard_t, home=shard_t)
+        if shard_s == shard_t:
+            rep = self.shards[shard_s].acquire()
+            ws, backend = rep.executor.explain_batch(
+                np.array([s]), np.array([t]), np.array([mr_id]),
+                max_hubs=max_hubs)
+            w = ws[0]
+            route.update(path="local")
+        else:
+            # cross-shard: the serving path ships s's out-row digest to
+            # the in-side owner (two-sided routing); the witness joins
+            # the exact rows that digest join would see
+            from repro.obs.explain import explain_rows
+            src = self.shards[shard_s].acquire()
+            dst = self.shards[shard_t].acquire()
+            oh, om = src.frozen.row_out(s)
+            ih, im = dst.frozen.row_in(t)
+            w = explain_rows(oh, om, ih, im, s, t, mr_id,
+                             aid=src.frozen.aid, max_hubs=max_hubs)
+            backend = "digest"
+            route.update(path="remote", digest_entries=int(len(oh)),
+                         digest_bytes=int(oh.nbytes + om.nbytes))
+        return dict(answer=w["answer"], backend=backend, witness=w,
+                    route=route)
 
     # -- incremental graph mutation -------------------------------------- #
     def apply_delta(self, delta) -> dict:
@@ -217,6 +261,10 @@ class ShardedRLCService:
             evicted = self.cache.invalidate_rows(dirty_s=dirty_out,
                                                  dirty_t=dirty_in)
         self.deltas_applied += 1
+        if self._shadow is not None:
+            # pre-delta answers may legitimately differ from the mutated
+            # graph's oracle (see RLCService.apply_delta)
+            self._shadow.discard_pending()
         return dict(delta=res.as_dict(), shards_touched=touched,
                     dirty_out=res.dirty_out.tolist(),
                     dirty_in=res.dirty_in.tolist(),
@@ -278,6 +326,9 @@ class ShardedRLCService:
         self.index = index
         self.frozen = frozen
         self.cache.clear()
+        if self._shadow is not None:
+            # answers served pre-swap verified against the old state
+            self._shadow.discard_pending()
         # a cached DeltaBuilder is pinned to the pre-swap graph/index —
         # drop it so the next apply_delta re-bootstraps from the swapped
         # state instead of silently reverting the swap
@@ -285,6 +336,34 @@ class ShardedRLCService:
         return self.generation
 
     # -- observability --------------------------------------------------- #
+    def audit_report(self, sample: int = 128, seed: int = 0) -> dict:
+        """Global-index audit plus a per-shard byte/entry breakdown —
+        the serving state a sharded stack actually holds is the shard
+        slices, so the global report carries one row per shard naming
+        its frozen/device allocation and entry count."""
+        from repro.obs.audit import (audit_index, bank_audit_metrics,
+                                     device_nbytes, frozen_nbytes)
+        rep = audit_index(self.frozen, self._id_to_mr, index=self.index,
+                          graph=self.graph, device_index=None,
+                          sample=sample, seed=seed)
+        shards = []
+        for rs in self.shards:
+            r0 = rs.replicas[0]
+            shards.append(dict(
+                shard=rs.shard_id, lo=int(rs.lo), hi=int(rs.hi),
+                generation=rs.generation,
+                replicas=len(rs.replicas),
+                entries=int(r0.frozen.num_entries()),
+                frozen_bytes=frozen_nbytes(r0.frozen),
+                device_bytes=device_nbytes(r0.device_index)))
+        rep["shards"] = shards
+        dev = sum(s["device_bytes"] or 0 for s in shards)
+        rep["bytes"]["device"] = dev if any(
+            s["device_bytes"] is not None for s in shards) else None
+        self._last_audit = rep
+        bank_audit_metrics(self.obs.registry, rep)
+        return rep
+
     def stats(self) -> dict:
         """The RLCService stats shape plus per-shard breakdowns."""
         return dict(
@@ -312,4 +391,6 @@ class ShardedRLCService:
                 plan=self.plan.as_dict()),
             telemetry=dict(enabled=self.obs.enabled,
                            tracing=self.obs.tracer.stats()),
+            shadow=(self._shadow.stats()
+                    if self._shadow is not None else None),
         )

@@ -1,0 +1,368 @@
+"""Index-health auditor, regression-gate, and obs-CLI tests
+(repro.obs.audit / benchmarks.regression / python -m repro.obs):
+report schema contract, redundancy + soundness detection on healthy and
+deliberately damaged indexes, drift-fingerprint properties across
+delta-vs-rebuild, metric banking, and the artifact tooling around them."""
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.build import build_rlc_index_with_stats
+from repro.graphgen import erdos_renyi, random_delta
+from repro.obs import MetricsRegistry, to_prometheus
+from repro.obs.audit import (AUDIT_SCHEMA, audit_index,
+                             bank_audit_metrics, fingerprint,
+                             validate_audit_report)
+from repro.service import RLCService, ServiceConfig
+from repro.service.sharded import ShardedRLCService, ShardedServiceConfig
+
+K = 2
+
+
+@pytest.fixture(scope="module")
+def served():
+    g = erdos_renyi(130, 3.5, 3, seed=21)
+    svc = RLCService.build(g, ServiceConfig(k=K))
+    yield g, svc
+    svc.close()
+
+
+# ------------------------------------------------------------------ #
+# Report shape + healthy-index invariants
+# ------------------------------------------------------------------ #
+def test_audit_report_validates_and_is_json_clean(served):
+    g, svc = served
+    rep = svc.audit_report(sample=64)
+    assert rep["schema"] == AUDIT_SCHEMA
+    validate_audit_report(rep)
+    validate_audit_report(json.loads(json.dumps(rep)))   # survives JSON
+    assert rep is svc._last_audit
+    ident = rep["identity"]
+    assert ident["entries"] == svc.frozen.num_entries()
+    assert ident["num_vertices"] == g.num_vertices
+
+
+def test_fresh_index_has_zero_violations(served):
+    g, svc = served
+    rep = svc.audit_report(sample=200)
+    assert rep["redundancy"]["violations"] == 0
+    assert rep["soundness"]["violations"] == 0
+    assert rep["soundness"]["sampled"] > 0
+
+
+def test_histograms_account_for_every_entry(served):
+    _g, svc = served
+    rep = svc.audit_report(sample=16)
+    h = rep["histograms"]
+    assert sum(h["hub_rank_decile"]["out"]) == rep["identity"]["entries_out"]
+    assert sum(h["hub_rank_decile"]["in_"]) == rep["identity"]["entries_in"]
+    assert sum(h["mr_len"]["out"].values()) == rep["identity"]["entries_out"]
+    assert sum(h["mr_len"]["in_"].values()) == rep["identity"]["entries_in"]
+    assert h["label"]                         # some label carries entries
+
+
+def test_byte_accounting_components(served):
+    _g, svc = served
+    rep = svc.audit_report(sample=8)
+    b = rep["bytes"]
+    assert b["index"] == svc.index.size_bytes()
+    assert b["frozen"] > 0
+    if svc.device_index is not None:
+        assert b["device"] > 0
+
+
+# ------------------------------------------------------------------ #
+# Detection: injected redundancy
+# ------------------------------------------------------------------ #
+def test_injected_redundant_entry_is_detected(served):
+    g, svc = served
+    from repro.core.queries import biased_true_queries
+    qs = biased_true_queries(g, K, n=40, seed=7)
+    # find a Case-1-only truth: reachable via a middle hub (distinct
+    # from both endpoints) but with no direct entry — adding the direct
+    # entry then violates Definition 5
+    target = None
+    for s, t, L in qs.true_queries:
+        b = svc.explain(s, t, L)
+        if b["witness"]["kind"] != "case1":
+            continue
+        mid = b["mr_id"]
+        oh, om = svc.frozen.row_out(s)
+        ih, im = svc.frozen.row_in(t)
+        o = set(oh[om == mid].tolist()) - {s, t}
+        i = set(ih[im == mid].tolist()) - {s, t}
+        if o & i:
+            target = (s, t, tuple(L))
+            break
+    assert target is not None
+    s, t, L = target
+    idx, _ = build_rlc_index_with_stats(g, K)       # private copy
+    idx.add_out(s, t, L)
+    idx.add_in(t, s, L)
+    frozen = idx.freeze(svc.mr_ids)
+    rep = audit_index(frozen, svc._id_to_mr,
+                      sample=frozen.num_entries() + 1)
+    assert rep["redundancy"]["violations"] >= 1
+    ex = rep["redundancy"]["examples"][0]
+    assert set(ex) == {"s", "t", "mr_id", "mr"}
+
+
+# ------------------------------------------------------------------ #
+# Drift fingerprints
+# ------------------------------------------------------------------ #
+def test_fingerprint_delta_equals_rebuild(served):
+    g, _svc = served
+    svc = RLCService.build(g, ServiceConfig(k=K, use_device=False))
+    svc.apply_delta(random_delta(svc.graph, 6, 3,
+                                 np.random.default_rng(2)))
+    rebuilt, _ = build_rlc_index_with_stats(svc.graph, K)
+    fp_serving = fingerprint(svc.frozen)
+    fp_rebuilt = fingerprint(rebuilt.freeze(svc.mr_ids))
+    assert fp_serving == fp_rebuilt           # PR5's bit-identical claim
+    svc.close()
+
+
+def test_fingerprint_localizes_drift_to_row_buckets(served):
+    g, svc = served
+    fp0 = fingerprint(svc.frozen)
+    idx, _ = build_rlc_index_with_stats(g, K)
+    v = 7
+    hub = next(h for h in range(g.num_vertices)
+               if h != v and not idx.has_out(v, h, (0,)))
+    idx.add_out(v, hub, (0,))
+    fp1 = fingerprint(idx.freeze(svc.mr_ids))
+    assert fp1["combined"] != fp0["combined"]
+    diff = [i for i, (a, b) in enumerate(zip(fp0["row_buckets_out"],
+                                             fp1["row_buckets_out"]))
+            if a != b]
+    assert diff == [v % 64]                   # names the residue class
+    assert fp0["row_buckets_in"] == fp1["row_buckets_in"]
+
+
+def test_fingerprint_differs_across_graphs():
+    g1 = erdos_renyi(60, 3.0, 3, seed=1)
+    g2 = erdos_renyi(60, 3.0, 3, seed=2)
+    s1 = RLCService.build(g1, ServiceConfig(k=K, use_device=False))
+    s2 = RLCService.build(g2, ServiceConfig(k=K, use_device=False))
+    assert fingerprint(s1.frozen)["combined"] != \
+        fingerprint(s2.frozen)["combined"]
+    s1.close()
+    s2.close()
+
+
+# ------------------------------------------------------------------ #
+# Schema contract: mutations must be rejected
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("mutate, hint", [
+    (lambda d: d.update(schema="repro.obs.audit/0"), "schema"),
+    (lambda d: d["identity"].update(entries=1), "entries"),
+    (lambda d: d["identity"].update(num_vertices=-1), "num_vertices"),
+    (lambda d: d["histograms"]["hub_rank_decile"].update(out=[1, 2]),
+     "hub_rank_decile"),
+    (lambda d: d["redundancy"].update(violations=10 ** 9), "violations"),
+    (lambda d: d["redundancy"].update(sampled=True), "sampled"),
+    (lambda d: d["bytes"].update(frozen=-5), "bytes"),
+    (lambda d: d["fingerprint"].update(combined="nope"), "combined"),
+    (lambda d: d["fingerprint"].update(row_buckets_out=[]),
+     "row_buckets_out"),
+])
+def test_audit_report_rejects_malformed(served, mutate, hint):
+    _g, svc = served
+    rep = json.loads(json.dumps(svc.audit_report(sample=8)))
+    mutate(rep)
+    with pytest.raises(ValueError, match=hint):
+        validate_audit_report(rep)
+
+
+# ------------------------------------------------------------------ #
+# Metric banking + sharded breakdown
+# ------------------------------------------------------------------ #
+def test_bank_audit_metrics_exports_prometheus_block(served):
+    _g, svc = served
+    reg = MetricsRegistry()
+    bank_audit_metrics(reg, svc.audit_report(sample=8))
+    text = to_prometheus(reg)
+    assert 'rlc_audit_entries{direction="out"}' in text
+    assert "rlc_audit_redundancy_violations" in text
+    assert 'rlc_audit_bytes{component="frozen"}' in text
+
+
+def test_sharded_audit_adds_per_shard_rows(served):
+    g, svc = served
+    sh = ShardedRLCService.build(
+        g, ShardedServiceConfig(k=K, num_shards=3), index=svc.index)
+    rep = sh.audit_report(sample=32)
+    validate_audit_report(rep)
+    assert len(rep["shards"]) == 3
+    assert sum(r["entries"] for r in rep["shards"]) == \
+        rep["identity"]["entries"]
+    for r in rep["shards"]:
+        assert r["frozen_bytes"] > 0
+    # audit rides the sharded snapshot's extra section too
+    snap = sh.telemetry_snapshot()
+    assert snap["extra"]["audit"]["shards"] == rep["shards"]
+    sh.close()
+
+
+# ------------------------------------------------------------------ #
+# Regression gate (benchmarks/regression.py)
+# ------------------------------------------------------------------ #
+def _bench_regression():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    from benchmarks import regression
+    return regression
+
+
+def _write_artifacts(d, qps=100.0, swap=0.1):
+    arts = {
+        "service.json": dict(results=dict(
+            sorted=dict(qps=qps), numpy=dict(qps=qps / 2),
+            cache_4096=dict(hit_rate=0.9, qps=qps * 2))),
+        "sharded.json": dict(results=dict(
+            shards_2=dict(qps=qps), hot_swap=dict(swap_s=swap))),
+        "indexing.json": dict(aggregate_s=dict(python=2.0, numpy=0.4),
+                              numpy_aggregate_speedup=5.0,
+                              parallel_speedup=1.8),
+        "delta.json": dict(best_single_speedup=5.0),
+    }
+    for name, doc in arts.items():
+        with open(os.path.join(d, name), "w") as f:
+            json.dump(doc, f)
+
+
+def test_regression_distill_and_clean_compare(tmp_path):
+    regression = _bench_regression()
+    d = str(tmp_path)
+    _write_artifacts(d)
+    base = regression.distill(d)
+    assert base["schema"] == regression.BASELINES_SCHEMA
+    assert len(base["metrics"]) == len(regression.METRICS)
+    verdict = regression.compare(d, base)
+    assert verdict["failed"] == 0 and verdict["warned"] == 0
+    assert all(r["status"] == "ok" for r in verdict["metrics"])
+
+
+def test_regression_warn_then_fail_ladder(tmp_path, monkeypatch):
+    regression = _bench_regression()
+    monkeypatch.delenv("RLC_BENCH_WARN_RATIO", raising=False)
+    monkeypatch.delenv("RLC_BENCH_FAIL_RATIO", raising=False)
+    d = str(tmp_path)
+    _write_artifacts(d, qps=100.0, swap=0.1)
+    base = regression.distill(d)
+    # 2x worse qps everywhere: warns (inside the 8x fail ratio)
+    _write_artifacts(d, qps=50.0, swap=0.2)
+    verdict = regression.compare(d, base)
+    assert verdict["failed"] == 0
+    assert verdict["warned"] >= 3
+    # 10x worse: hard failure
+    _write_artifacts(d, qps=10.0, swap=1.0)
+    verdict = regression.compare(d, base)
+    assert verdict["failed"] >= 3
+    # a *better* fresh number never warns, whatever the direction
+    _write_artifacts(d, qps=1000.0, swap=0.01)
+    verdict = regression.compare(d, base)
+    assert verdict["failed"] == 0 and verdict["warned"] == 0
+    # env override tightens the ladder
+    monkeypatch.setenv("RLC_BENCH_FAIL_RATIO", "1.5")
+    _write_artifacts(d, qps=50.0, swap=0.2)
+    verdict = regression.compare(d, base)
+    assert verdict["failed"] >= 3
+
+
+def test_regression_missing_metric_fails(tmp_path):
+    regression = _bench_regression()
+    d = str(tmp_path)
+    _write_artifacts(d)
+    base = regression.distill(d)
+    os.unlink(os.path.join(d, "delta.json"))
+    verdict = regression.compare(d, base)
+    rows = {r["metric"]: r for r in verdict["metrics"]}
+    assert rows["delta:best_single_speedup"]["status"] == "missing"
+    assert verdict["failed"] >= 1
+
+
+def test_regression_gate_writes_verdict_and_reports(tmp_path):
+    regression = _bench_regression()
+    d = str(tmp_path)
+    _write_artifacts(d)
+    base_path = os.path.join(d, "baselines.json")
+    with open(base_path, "w") as f:
+        json.dump(regression.distill(d), f)
+    assert regression.gate(d, base_path) == []
+    with open(os.path.join(d, "regression.json")) as f:
+        verdict = json.load(f)
+    assert verdict["schema"] == "repro.bench.regression/1"
+    # degrade far past fail_ratio: gate returns orchestrator failures
+    _write_artifacts(d, qps=1.0, swap=10.0)
+    failures = regression.gate(d, base_path)
+    assert failures and all(n.startswith("regression:")
+                            for n, _e in failures)
+
+
+def test_committed_baselines_parse():
+    regression = _bench_regression()
+    doc = regression.load_baselines()
+    assert doc is not None, "benchmarks/baselines.json must be committed"
+    assert doc["schema"] == regression.BASELINES_SCHEMA
+    assert doc["metrics"]
+
+
+# ------------------------------------------------------------------ #
+# CLI: python -m repro.obs
+# ------------------------------------------------------------------ #
+def _cli(argv):
+    from repro.obs.__main__ import main
+    return main(argv)
+
+
+def test_cli_validate_dump_prom_audit(tmp_path, served, capsys):
+    _g, svc = served
+    svc.query_batch([(0, 1, (0,)), (2, 3, (1,))])
+    svc.audit_report(sample=8)
+    snap_path = tmp_path / "snap.json"
+    with open(snap_path, "w") as f:
+        json.dump(svc.telemetry_snapshot(), f)
+    assert _cli(["validate", str(snap_path)]) == 0
+    out = capsys.readouterr().out
+    assert "OK repro.obs/1" in out
+    assert "OK repro.obs.audit/1" in out      # embedded in extra
+    assert _cli(["dump", str(snap_path)]) == 0
+    assert "rlc_cache_lookups" in capsys.readouterr().out
+    assert _cli(["prom", str(snap_path)]) == 0
+    assert "rlc_cache_lookups_total" in capsys.readouterr().out
+    assert _cli(["audit", str(snap_path)]) == 0
+    assert "fingerprint:" in capsys.readouterr().out
+
+
+def test_cli_flags_invalid_documents(tmp_path, capsys):
+    bad = tmp_path / "bad.json"
+    with open(bad, "w") as f:
+        json.dump(dict(schema="repro.obs/1", metrics="nope"), f)
+    assert _cli(["validate", str(bad)]) == 1
+    assert "INVALID" in capsys.readouterr().out
+    empty = tmp_path / "empty.json"
+    with open(empty, "w") as f:
+        json.dump(dict(hello="world"), f)
+    assert _cli(["validate", str(empty)]) == 1
+    assert _cli(["audit", str(empty)]) == 1
+    assert _cli([]) == 2                      # usage error
+    assert _cli(["validate", str(tmp_path / "missing.json")]) == 2
+
+
+def test_cli_chrome_trace_summary(tmp_path, capsys):
+    g = erdos_renyi(50, 3.0, 3, seed=4)
+    svc = RLCService.build(g, ServiceConfig(k=K, trace_sample_rate=1.0,
+                                            use_device=False))
+    svc.query_batch([(0, 1, (0,)), (2, 3, (1,))])
+    path = tmp_path / "trace.json"
+    with open(path, "w") as f:
+        json.dump(svc.chrome_trace(), f)
+    assert _cli(["chrome", str(path)]) == 0
+    assert "spans" in capsys.readouterr().out
+    assert _cli(["validate", str(path)]) == 0
+    svc.close()

@@ -1,0 +1,305 @@
+"""Query EXPLAIN and shadow-verification tests (repro.obs.explain /
+repro.obs.shadow): witness correctness against the BiBFS oracle and the
+dict-layout index, backend agreement, cache/coalescing dispositions,
+sharded routing hops, and the shadow verifier's divergence detection on
+a deliberately corrupted index."""
+import numpy as np
+import pytest
+
+from repro.core.baselines import bibfs_rlc
+from repro.core.queries import biased_true_queries, sample_index_queries
+from repro.graphgen import erdos_renyi, random_delta
+from repro.obs.explain import (NEGATIVE_REASONS, WITNESS_SCHEMA,
+                               explain_rows, replay_witness,
+                               verify_witness_entries)
+from repro.obs.shadow import ShadowVerifier
+from repro.service import RLCService, ServiceConfig
+from repro.service.sharded import ShardedRLCService, ShardedServiceConfig
+
+K = 2
+
+
+@pytest.fixture(scope="module")
+def served():
+    g = erdos_renyi(150, 3.5, 3, seed=11)
+    svc = RLCService.build(g, ServiceConfig(k=K, batch_size=16))
+    qs = biased_true_queries(g, K, n=40, seed=7)
+    yield g, svc, qs
+    svc.close()
+
+
+# ------------------------------------------------------------------ #
+# Witness correctness: the acceptance-criterion property
+# ------------------------------------------------------------------ #
+def test_positive_witnesses_replay_true_under_oracle(served):
+    g, svc, qs = served
+    for s, t, L in qs.true_queries:
+        b = svc.explain(s, t, L)
+        assert b["answer"] is True
+        w = b["witness"]
+        assert w["schema"] == WITNESS_SCHEMA
+        assert w["kind"] in ("case2_out", "case2_in", "case1")
+        assert replay_witness(g, b) is True
+        assert verify_witness_entries(svc.index, w, b["mr"])
+
+
+def test_negative_witnesses_replay_false_and_name_a_reason(served):
+    g, svc, qs = served
+    for s, t, L in qs.false_queries:
+        b = svc.explain(s, t, L)
+        assert b["answer"] is False
+        w = b["witness"]
+        assert w["kind"] == "negative"
+        assert w["negative"]["reason"] in NEGATIVE_REASONS
+        assert replay_witness(g, b) is False
+        assert verify_witness_entries(svc.index, w, b["mr"])
+
+
+def test_explain_agrees_with_query_across_backends(served):
+    g, svc, qs = served
+    queries = (qs.true_queries + qs.false_queries)[:30]
+    for backend in ("sorted", "numpy", "python"):
+        b_svc = RLCService.build(
+            g, ServiceConfig(k=K, backend=backend,
+                             use_device=(backend == "sorted")),
+            index=svc.index)
+        for s, t, L in queries:
+            bundle = b_svc.explain(s, t, L)
+            assert bundle["answer"] == b_svc.query(s, t, L), (backend, s, t)
+        b_svc.close()
+
+
+def test_case1_hubs_exist_on_both_sides(served):
+    g, svc, qs = served
+    seen_case1 = False
+    for s, t, L in qs.true_queries:
+        w = svc.explain(s, t, L)["witness"]
+        if w["kind"] != "case1":
+            continue
+        seen_case1 = True
+        assert w["join_hubs"] >= 1
+        assert len(w["hubs"]) == min(w["join_hubs"], 8)
+        for h in w["hubs"]:
+            assert svc.index.has_out(s, h["hub"], tuple(L))
+            assert svc.index.has_in(t, h["hub"], tuple(L))
+    assert seen_case1    # the workload must actually exercise the join
+
+
+# ------------------------------------------------------------------ #
+# explain_rows unit behavior
+# ------------------------------------------------------------------ #
+def test_explain_rows_pad_filtering_matches_exact_rows():
+    oh = np.array([3, 7, -1, -1], np.int32)
+    om = np.array([0, 1, -1, -1], np.int32)
+    ih = np.array([7, -1], np.int32)
+    im = np.array([1, -1], np.int32)
+    padded = explain_rows(oh, om, ih, im, 0, 9, 1, pad=-1)
+    exact = explain_rows(oh[:2], om[:2], ih[:1], im[:1], 0, 9, 1)
+    assert padded == exact
+    assert padded["answer"] is True
+    assert padded["kind"] == "case1"
+    assert [h["hub"] for h in padded["hubs"]] == [7]
+
+
+def test_explain_rows_negative_reasons():
+    e = np.empty(0, np.int32)
+    r = explain_rows(e, e, e, e, 0, 1, 0)
+    assert r["negative"]["reason"] == "empty_out_row"
+    one = np.array([5], np.int32)
+    mr0 = np.array([0], np.int32)
+    r = explain_rows(one, mr0, e, e, 0, 1, 0)
+    assert r["negative"]["reason"] == "empty_in_row"
+    # both rows non-empty, queried mr only on the in side
+    r = explain_rows(one, np.array([1], np.int32), one, mr0, 0, 1, 0)
+    assert r["negative"]["reason"] == "no_out_candidates"
+    r = explain_rows(one, mr0, one, np.array([1], np.int32), 0, 1, 0)
+    assert r["negative"]["reason"] == "no_in_candidates"
+    r = explain_rows(np.array([5], np.int32), mr0,
+                     np.array([6], np.int32), mr0, 0, 1, 0)
+    assert r["negative"]["reason"] == "disjoint_hub_sets"
+
+
+def test_witness_hub_cap_and_truncation_flag():
+    hubs = np.arange(20, dtype=np.int32)
+    mrs = np.zeros(20, np.int32)
+    w = explain_rows(hubs, mrs, hubs, mrs, 100, 101, 0)
+    assert w["join_hubs"] == 20
+    assert len(w["hubs"]) == 8
+    assert w["truncated"] is True
+
+
+# ------------------------------------------------------------------ #
+# Service dispositions: cache / coalescing, and non-mutation
+# ------------------------------------------------------------------ #
+def test_explain_reports_cache_disposition_without_mutating(served):
+    g, svc, qs = served
+    s, t, L = qs.true_queries[0]
+    key = (s, t, svc.mr_ids[tuple(L)])
+    svc.cache.clear()
+    b = svc.explain(s, t, L)
+    assert b["cache"] == dict(disposition="miss", answer=None)
+    assert svc.cache.peek(key) is None       # explain didn't populate it
+    svc.query(s, t, L)                        # now it's cached
+    lookups_before = svc.cache.stats.lookups
+    b = svc.explain(s, t, L)
+    assert b["cache"] == dict(disposition="hit", answer=True)
+    # the probe is invisible to the serving hit-rate series
+    assert svc.cache.stats.lookups == lookups_before
+
+
+def test_explain_reports_coalescing_disposition(served):
+    g, svc, qs = served
+    s, t, L = qs.true_queries[1]
+    mr_id = svc.mr_ids[tuple(L)]
+    svc.cache.clear()
+    assert svc.explain(s, t, L)["coalesced"] is False
+    svc.batcher.submit(s, t, mr_id, len(L))   # leave it queued, unflushed
+    assert svc.explain(s, t, L)["coalesced"] is True
+    svc.batcher.drain()
+
+
+def test_explain_span_lands_in_chrome_trace():
+    g = erdos_renyi(60, 3.0, 3, seed=2)
+    svc = RLCService.build(g, ServiceConfig(k=K, trace_sample_rate=1.0))
+    svc.explain(0, 1, (0,))
+    names = [e.get("name") for e in
+             svc.chrome_trace()["traceEvents"]]
+    assert "explain" in names
+    assert svc.obs.registry.get("rlc_explain_requests") is not None
+    svc.close()
+
+
+# ------------------------------------------------------------------ #
+# Sharded EXPLAIN: routing hops
+# ------------------------------------------------------------------ #
+def test_sharded_explain_routes_and_matches_single_host(served):
+    g, svc, qs = served
+    sh = ShardedRLCService.build(
+        g, ShardedServiceConfig(k=K, num_shards=3), index=svc.index)
+    paths = set()
+    for s, t, L in (qs.true_queries + qs.false_queries)[:40]:
+        b = sh.explain(s, t, L)
+        assert b["answer"] == svc.query(s, t, L)
+        route = b["route"]
+        assert route["shard_s"] == sh.plan.shard_of(s)
+        assert route["shard_t"] == sh.plan.shard_of(t)
+        assert route["home"] == route["shard_t"]
+        paths.add(route["path"])
+        if route["path"] == "remote":
+            assert b["backend"] == "digest"
+            assert route["digest_entries"] >= 0
+            assert route["digest_bytes"] >= 0
+            assert replay_witness(g, b) == b["answer"]
+    assert paths == {"local", "remote"}   # both join paths exercised
+    # EXPLAIN must not skew the router's serving counters
+    rst = sh.router.stats()
+    assert rst["local"] == 0 and rst["remote"] == 0
+    sh.close()
+
+
+# ------------------------------------------------------------------ #
+# Shadow verification
+# ------------------------------------------------------------------ #
+def test_shadow_healthy_service_zero_divergence(served):
+    g, _svc, qs = served
+    svc = RLCService.build(
+        g, ServiceConfig(k=K, shadow_sample_rate=1.0), index=_svc.index)
+    svc.query_batch(qs.true_queries + qs.false_queries)
+    checked = svc.drain_shadow()
+    st = svc._shadow.stats()
+    assert checked == len(qs.true_queries) + len(qs.false_queries)
+    assert st["divergent"] == 0
+    assert st["divergences"] == 0
+    snap = svc.telemetry_snapshot()
+    assert snap["extra"]["shadow"]["divergent"] == 0
+    svc.close()
+
+
+def test_shadow_detects_corrupted_index():
+    g = erdos_renyi(120, 3.5, 3, seed=13)
+    svc = RLCService.build(
+        g, ServiceConfig(k=K, backend="numpy", use_device=False,
+                         cache_capacity=0, shadow_sample_rate=1.0))
+    s, t, L = sample_index_queries(svc.frozen, svc._id_to_mr,
+                                   n=1, seed=3)[0]
+    assert svc.query(s, t, L) is True
+    svc.drain_shadow()
+    assert svc._shadow.divergent == 0
+    # corrupt both entry rows the query joins: the served answer flips
+    # to False while the oracle still proves the path exists
+    o0, o1 = svc.frozen.out_indptr[s], svc.frozen.out_indptr[s + 1]
+    i0, i1 = svc.frozen.in_indptr[t], svc.frozen.in_indptr[t + 1]
+    svc.frozen.out_hub[o0:o1] = -2
+    svc.frozen.in_hub[i0:i1] = -2
+    assert svc.query(s, t, L) is False           # corrupted serving path
+    assert bibfs_rlc(g, s, t, L) is True          # ground truth unchanged
+    svc.drain_shadow()
+    st = svc._shadow.stats()
+    assert st["divergent"] >= 1
+    assert len(svc._shadow.divergences) >= 1
+    bundle = svc._shadow.divergences[0]
+    assert bundle["served_answer"] is False
+    assert bundle["oracle"] is True
+    assert bundle["s"] == s and bundle["t"] == t
+    svc.close()
+
+
+def test_shadow_discards_pending_across_delta():
+    g = erdos_renyi(80, 3.0, 3, seed=5)
+    svc = RLCService.build(
+        g, ServiceConfig(k=K, use_device=False,
+                         shadow_sample_rate=1.0))
+    qs = biased_true_queries(g, K, n=10, seed=2)
+    svc.query_batch(qs.true_queries)
+    assert svc._shadow.stats()["pending"] > 0
+    svc.apply_delta(random_delta(svc.graph, 4, 2,
+                                 np.random.default_rng(9)))
+    assert svc._shadow.stats()["pending"] == 0
+    assert svc._shadow.discarded > 0
+    # post-delta answers verify cleanly against the mutated graph
+    qs2 = biased_true_queries(svc.graph, K, n=10, seed=3)
+    svc.query_batch(qs2.true_queries)
+    svc.drain_shadow()
+    assert svc._shadow.divergent == 0
+    svc.close()
+
+
+def test_shadow_queue_bound_drops_oldest():
+    g = erdos_renyi(30, 2.0, 2, seed=1)
+    svc = RLCService.build(g, ServiceConfig(k=K, use_device=False))
+    sv = ShadowVerifier(svc, sample_rate=1.0, max_pending=4)
+    for i in range(10):
+        sv.offer(0, i % 30, 0, False)
+    st = sv.stats()
+    assert st["pending"] == 4
+    assert st["dropped"] == 6
+    assert st["offered"] == 10
+    svc.close()
+
+
+def test_shadow_sampling_rate_zero_disables():
+    g = erdos_renyi(40, 2.5, 2, seed=6)
+    svc = RLCService.build(g, ServiceConfig(k=K, use_device=False))
+    assert svc._shadow is None                  # default rate is 0
+    assert svc.drain_shadow() == 0
+    assert svc.stats()["shadow"] is None
+    svc.close()
+
+
+def test_shadow_background_thread_drains():
+    g = erdos_renyi(60, 3.0, 3, seed=8)
+    svc = RLCService.build(
+        g, ServiceConfig(k=K, use_device=False, shadow_sample_rate=1.0,
+                         shadow_background=True))
+    assert svc._shadow.running
+    qs = biased_true_queries(g, K, n=8, seed=2)
+    svc.query_batch(qs.true_queries)
+    deadline = 100
+    while svc._shadow.stats()["pending"] and deadline:
+        import time
+        time.sleep(0.02)
+        deadline -= 1
+    assert svc._shadow.stats()["pending"] == 0
+    assert svc._shadow.divergent == 0
+    svc.close()
+    assert not svc._shadow.running

@@ -274,6 +274,21 @@ def test_snapshot_validates_and_serializes():
     (lambda d: d["metrics"]["rlc_cache_size"]["series"][0]
         .update(value="two"), "value"),
     (lambda d: d.update(tracing=dict(sample_rate="high")), "tracing"),
+    # a reservoir that observed anything keeps >= 1 sample: count>0 with
+    # stored==0 means the series was assembled by hand or clobbered
+    (lambda d: d["metrics"]["rlc_executor_batch_seconds"]["series"][0]
+        .update(stored=0), "stored"),
+    # NaN/inf percentiles serialize to invalid JSON and poison
+    # aggregation downstream — the validator must reject, not pass,
+    # non-finite floats
+    (lambda d: d["metrics"]["rlc_executor_batch_seconds"]["series"][0]
+        .update(p50=float("nan")), "p50"),
+    (lambda d: d["metrics"]["rlc_executor_batch_seconds"]["series"][0]
+        .update(sum=float("inf")), "sum"),
+    (lambda d: d["metrics"]["rlc_cache_size"]["series"][0]
+        .update(value=float("nan")), "value"),
+    (lambda d: d["metrics"]["rlc_executor_batch_seconds"]["series"][0]
+        .update(count=True), "count"),
 ])
 def test_snapshot_rejects_malformed(mutate, path_hint):
     doc = snapshot(_populated_registry())
@@ -498,6 +513,13 @@ def test_run_py_validates_telemetry_artifacts(tmp_path, monkeypatch):
         with open(tmp_path / name, "w") as f:
             json.dump(doc, f)
 
+    # a real audit report + clean shadow stats, as the serving suites
+    # embed them via telemetry_snapshot's extra section
+    svc = RLCService.build(erdos_renyi(40, 2.5, 3, seed=3),
+                           ServiceConfig(k=2, use_device=False))
+    audit = svc.audit_report(sample=16)
+    good["extra"] = dict(audit=audit, shadow=dict(divergent=0, checked=4))
+
     write("service.json", dict(results=dict(numpy=dict(telemetry=good))))
     write("sharded.json", dict(results=dict(shards_2=dict(telemetry=good))))
     write("sharded_trace.json", trace)
@@ -508,7 +530,23 @@ def test_run_py_validates_telemetry_artifacts(tmp_path, monkeypatch):
     bad["schema"] = "repro.obs/999"
     write("service.json", dict(results=dict(numpy=dict(telemetry=bad))))
     fails = bench_run.validate_telemetry_artifacts(["service"])
-    assert [name for name, _err in fails] == ["service:telemetry"]
+    # the audit walker skips unrecognized schemas, so both checks trip
+    assert [name for name, _err in fails] == ["service:telemetry",
+                                              "service:audit"]
+    # a shadow divergence recorded in any embedded snapshot fails the run
+    diverged = json.loads(json.dumps(good))
+    diverged["extra"]["shadow"]["divergent"] = 1
+    write("service.json",
+          dict(results=dict(numpy=dict(telemetry=diverged))))
+    fails = bench_run.validate_telemetry_artifacts(["service"])
+    assert any(name == "service:audit" for name, _err in fails)
+    # a corrupted audit report fails the run too
+    bad_audit = json.loads(json.dumps(good))
+    bad_audit["extra"]["audit"]["identity"]["entries"] += 1
+    write("service.json",
+          dict(results=dict(numpy=dict(telemetry=bad_audit))))
+    fails = bench_run.validate_telemetry_artifacts(["service"])
+    assert any(name == "service:audit" for name, _err in fails)
     # suites with no embedded telemetry at all must also fail
     write("sharded.json", dict(results=dict(shards_2=dict(qps=1.0))))
     fails = bench_run.validate_telemetry_artifacts(["sharded"])

@@ -23,27 +23,10 @@ from repro.core.queries import biased_true_queries
 from repro.graphgen import erdos_renyi
 from repro.service import RLCService, ServiceConfig
 
-from .common import Report, hist_summary_us, run_query_stream, zipf_weights
+from .common import (Report, hist_summary_us, run_query_stream,
+                     warm_service, zipf_weights)
 
 ART = os.path.join(os.path.dirname(__file__), "artifacts")
-
-
-def _warmup(svc: RLCService, backend: str) -> None:
-    """Trigger jit compilation for the (batch_size,) query shape outside the
-    timed stream, without touching the result cache, then zero the
-    per-backend recorders (and the matching registry reservoirs) so the
-    report shows steady-state serving."""
-    from repro.obs import Reservoir
-    from repro.service.executor import BACKENDS
-    from repro.service.metrics import LatencyRecorder
-    B = svc.batcher.batch_size
-    z = np.zeros(B, np.int32)
-    svc.executor.execute(z, z, z, backend=backend)
-    svc.executor.recorders = {b: LatencyRecorder(b) for b in BACKENDS}
-    m = svc.obs.registry.get("rlc_executor_batch_seconds")
-    if m is not None:
-        for _key, cell in m.series():   # drop the compile-batch outlier
-            cell.reservoir = Reservoir(cell.reservoir.cap)
 
 
 def run(quick: bool = True, smoke: bool = False, k: int = 2) -> Report:
@@ -82,7 +65,7 @@ def run(quick: bool = True, smoke: bool = False, k: int = 2) -> Report:
                              cache_capacity=1024, backend=backend,
                              shadow_sample_rate=shadow_rate),
             index=base.index)
-        _warmup(svc, backend)
+        warm = warm_service(svc, stream[:500], chunk=64, backend=backend)
         lat = run_query_stream(svc, stream, chunk=64)
         st = svc.stats()
         # label the row with the backend that actually answered (fallback
@@ -111,6 +94,7 @@ def run(quick: bool = True, smoke: bool = False, k: int = 2) -> Report:
             batches_full=st["scheduler"]["batches_full"],
             batches_deadline=st["scheduler"]["batches_deadline"],
             batches_drain=st["scheduler"]["batches_drain"],
+            warmup_s=warm["warm_s"], compile_s=warm["compile_s"],
         )
         rep.add(**row)
         svc.audit_report(sample=64)    # embedded via snapshot extra
@@ -122,7 +106,7 @@ def run(quick: bool = True, smoke: bool = False, k: int = 2) -> Report:
         svc = RLCService.build(
             g, ServiceConfig(k=k, batch_size=32, cache_capacity=cap,
                              backend="sorted"), index=base.index)
-        _warmup(svc, "sorted")
+        warm_service(svc, stream[:500], chunk=64, backend="sorted")
         lat = run_query_stream(svc, stream, chunk=64)
         st = svc.stats()
         rep.add(stage="cache_ablation", cache_capacity=cap,

@@ -65,6 +65,75 @@ def hist_summary_us(registry, name: str, labels: Dict[str, str] = None
                 p99_us=round(float(np.percentile(arr, 99)) * 1e6, 1))
 
 
+def warm_service(svc, stream, chunk: int = 64,
+                 backend: str = None) -> Dict[str, float]:
+    """Precompile and warm a service outside the measured window, so the
+    measured run shows steady-state serving.
+
+    Two passes: (1) every executor (single-host ``svc.executor``, or each
+    replica of a sharded service) runs one batch per power-of-two shape
+    up to the largest batch the SLO controller may grow to — since the
+    scheduler stopped padding, the jit backends pad to pow2 internally,
+    so this is the complete shape set and its elapsed time is the XLA
+    compile cost (returned as ``compile_s``; it used to surface as a
+    ~350ms ``exec_p99_us`` outlier in the measured window); (2) one
+    unmeasured pass of ``stream`` through the serving path.
+
+    Resets afterwards: per-backend/per-path latency recorders, the
+    latency histograms' reservoirs, the result cache (contents + stats),
+    and the served-query counter. Monotonic counters (registry totals,
+    shed/admission counts) are left alone — exporters must stay
+    cumulative.
+    """
+    from repro.obs import Reservoir
+    from repro.service.cache import CacheStats
+    from repro.service.executor import BACKENDS
+    from repro.service.metrics import LatencyRecorder
+
+    backend = backend or svc.config.backend
+    slo = svc.ctl.slo
+    max_b = max(svc.batcher.batch_size,
+                slo.max_batch if slo is not None else 0)
+    executors = []
+    ex = getattr(svc, "executor", None)
+    if ex is not None:
+        executors.append(ex)
+    for rs in getattr(svc, "shards", ()):
+        executors.extend(rep.executor for rep in rs.replicas)
+
+    t0 = time.perf_counter()
+    n = 1
+    while n <= max_b:
+        z = np.zeros(n, np.int32)
+        for ex in executors:
+            ex.execute(z, z, z, backend=backend)
+        n *= 2
+    compile_s = time.perf_counter() - t0
+    run_query_stream(svc, stream, chunk=chunk)
+    warm_s = time.perf_counter() - t0
+
+    def fresh_recorders(obj, names):
+        obj.recorders = {n: LatencyRecorder(n) for n in names}
+
+    for ex in executors:
+        fresh_recorders(ex, BACKENDS)
+    fanout = getattr(svc, "fanout", None)
+    if fanout is not None:
+        fresh_recorders(fanout, ("local", "remote"))
+    reg = svc.obs.registry
+    for name in ("rlc_executor_batch_seconds",
+                 "rlc_batcher_queue_wait_seconds",
+                 "rlc_fanout_subbatch_seconds"):
+        m = reg.get(name)
+        if m is not None:
+            for _key, cell in m.series():
+                cell.reservoir = Reservoir(cell.reservoir.cap)
+    svc.cache.clear()
+    svc.cache.stats = CacheStats()
+    svc.queries_served = 0
+    return dict(warm_s=round(warm_s, 3), compile_s=round(compile_s, 4))
+
+
 def timeit(fn: Callable, repeats: int = 1) -> float:
     """Median wall seconds over ``repeats`` calls."""
     ts = []

@@ -48,6 +48,11 @@ METRICS: List[Tuple[str, Tuple[str, ...], str]] = [
     ("service.json", ("results", "cache_4096", "hit_rate"), "higher"),
     ("sharded.json", ("results", "shards_2", "qps"), "higher"),
     ("sharded.json", ("results", "hot_swap", "swap_s"), "lower"),
+    # control plane: tail ratio under an SLO target, shedding engaged
+    # under 2x-capacity overload, post-swap warmed hit rate
+    ("sharded.json", ("results", "slo", "p99_over_p50"), "lower"),
+    ("sharded.json", ("results", "overload", "shed_ratio"), "higher"),
+    ("sharded.json", ("results", "warming", "warm_hit_rate"), "higher"),
     ("indexing.json", ("aggregate_s", "numpy"), "lower"),
     ("indexing.json", ("numpy_aggregate_speedup",), "higher"),
     ("indexing.json", ("parallel_speedup",), "higher"),

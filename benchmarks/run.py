@@ -134,6 +134,37 @@ def validate_telemetry_artifacts(ran):
             if ev["ph"] == "X" and (ev["dur"] < 0 or ev["ts"] < 0):
                 raise ValueError(f"negative ts/dur in {ev}")
 
+    def control_stages_ok(path):
+        """The adaptive-serving stages must have run and their invariants
+        must hold: no shedding at/below capacity, shedding engaged (and
+        every non-shed answer oracle-identical) at 2x capacity, and the
+        warmed post-swap hit rate at least matching the cold one."""
+        with open(path) as f:
+            doc = json.load(f)
+        res = doc.get("results", {})
+        for key in ("slo", "overload", "warming"):
+            if key not in res:
+                raise ValueError(f"no {key!r} stage in {path}")
+        slo = res["slo"]
+        if slo["shed"] != 0:
+            raise ValueError(f"slo stage shed {slo['shed']} queries at "
+                             f"offered load <= capacity")
+        ov = res["overload"]
+        if ov["underload_shed"] != 0:
+            raise ValueError(f"shed {ov['underload_shed']} queries at "
+                             f"0.5x capacity")
+        if not ov["answers_match_oracle"] or not ov["underload"][
+                "answers_match_oracle"]:
+            raise ValueError("non-shed answers diverged from the "
+                             "single-host oracle under overload")
+        if not isinstance(ov["shed_ratio"], (int, float)):
+            raise ValueError(f"bad overload shed_ratio {ov['shed_ratio']!r}")
+        wm = res["warming"]
+        if wm["warm_hit_rate"] < wm["cold_hit_rate"]:
+            raise ValueError(
+                f"warming hurt the post-swap hit rate: warmed "
+                f"{wm['warm_hit_rate']} < cold {wm['cold_hit_rate']}")
+
     def parallel_speedup_ok(path):
         with open(path) as f:
             doc = json.load(f)
@@ -190,6 +221,8 @@ def validate_telemetry_artifacts(ran):
             os.path.join(ART, "sharded_trace.json")))
         check("sharded:audit", lambda: audits_and_shadow_of(
             "sharded", os.path.join(ART, "sharded.json")))
+        check("sharded:control", lambda: control_stages_ok(
+            os.path.join(ART, "sharded.json")))
     if audits:
         with open(os.path.join(ART, "audit.json"), "w") as f:
             json.dump(dict(suites=audits), f, indent=2)

@@ -12,6 +12,9 @@ synchronous query service:
   requests into fixed-size padded batches bucketed by MR length;
 * :mod:`repro.service.executor` — multi-backend batch executor (python /
   numpy / XLA-sorted / Pallas-dense) with automatic fallback;
+* :mod:`repro.service.control` — the closed-loop control plane:
+  SLO-aware per-MR-length batching, admission control with explicit
+  ``SHED`` answers, and frequency-sketch-prioritized cache warming;
 * :mod:`repro.service.service` — the :class:`RLCService` facade wiring
   build -> freeze -> device transfer -> serve;
 * :mod:`repro.service.sharded` — sharded multi-host serving: shard
@@ -19,6 +22,8 @@ synchronous query service:
   fan-out behind the drop-in :class:`ShardedRLCService` facade.
 """
 from .cache import CacheStats, ResultCache
+from .control import (SHED, AdmissionController, CacheWarmer, ControlPlane,
+                      FrequencySketch, SLOBatchController, VirtualClock)
 from .executor import BACKENDS, BatchExecutor, ExecutorError
 from .expr import ExpressionError, PathExpression, parse_expression
 from .metrics import LatencyRecorder
@@ -27,8 +32,10 @@ from .service import RLCService, ServiceConfig
 from .sharded import ShardedRLCService, ShardedServiceConfig
 
 __all__ = [
-    "BACKENDS", "Batch", "BatchExecutor", "CacheStats", "ExecutorError",
-    "ExpressionError", "LatencyRecorder", "MicroBatcher", "PathExpression",
-    "RLCService", "Request", "ResultCache", "ServiceConfig",
-    "ShardedRLCService", "ShardedServiceConfig", "parse_expression",
+    "BACKENDS", "AdmissionController", "Batch", "BatchExecutor",
+    "CacheStats", "CacheWarmer", "ControlPlane", "ExecutorError",
+    "ExpressionError", "FrequencySketch", "LatencyRecorder", "MicroBatcher",
+    "PathExpression", "RLCService", "Request", "ResultCache", "SHED",
+    "SLOBatchController", "ServiceConfig", "ShardedRLCService",
+    "ShardedServiceConfig", "VirtualClock", "parse_expression",
 ]

@@ -18,10 +18,10 @@ from __future__ import annotations
 
 import time
 from collections import OrderedDict
-from dataclasses import dataclass
-from typing import Callable, Optional, Tuple
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Tuple
 
-from repro.obs import NULL_OBS
+from repro.obs import NULL_OBS, Reservoir
 
 Key = Tuple[int, int, int]  # (s, t, mr_id)
 
@@ -33,21 +33,37 @@ class CacheStats:
     evictions: int = 0
     expirations: int = 0
     invalidations: int = 0
+    # per-MR-length (hits, misses) — the warming-priority input: MR
+    # lengths that miss more benefit more from pre-materialization
+    by_mr_len: Dict[int, Tuple[int, int]] = field(default_factory=dict)
 
     @property
     def lookups(self) -> int:
-        return self.hits + self.misses
+        # expirations are lookups too (an entry was found but stale) —
+        # they dilute the hit rate without counting as plain misses
+        return self.hits + self.misses + self.expirations
 
     @property
     def hit_rate(self) -> float:
         return self.hits / self.lookups if self.lookups else 0.0
+
+    def record(self, mr_len: Optional[int], hit: bool) -> None:
+        if mr_len is None:
+            return
+        h, m = self.by_mr_len.get(mr_len, (0, 0))
+        self.by_mr_len[mr_len] = (h + 1, m) if hit else (h, m + 1)
+
+    def hit_rate_by_mr_len(self) -> Dict[int, float]:
+        return {ln: h / (h + m) if h + m else 0.0
+                for ln, (h, m) in sorted(self.by_mr_len.items())}
 
     def as_dict(self) -> dict:
         return dict(hits=self.hits, misses=self.misses,
                     evictions=self.evictions,
                     expirations=self.expirations,
                     invalidations=self.invalidations,
-                    hit_rate=self.hit_rate)
+                    hit_rate=self.hit_rate,
+                    hit_rate_by_mr_len=self.hit_rate_by_mr_len())
 
 
 class ResultCache:
@@ -87,32 +103,54 @@ class ResultCache:
             desc="entries dropped by invalidate_rows/clear").labels()
         self._m_size = reg.gauge("rlc_cache_size",
                                  desc="entries currently cached").labels()
+        self._m_mr = reg.counter(
+            "rlc_cache_mr_lookups",
+            desc="result-cache lookups by outcome and MR length",
+            labelnames=("outcome", "mr_len"))
+        self._m_evict_age = reg.histogram(
+            "rlc_cache_eviction_age_seconds",
+            desc="entry age (insert -> LRU eviction) at capacity "
+                 "eviction", unit="s").labels()
+        # standalone reservoir so eviction_age_summary works with the
+        # null registry too (warming reads it without telemetry on)
+        self.eviction_ages = Reservoir()
 
     def __len__(self) -> int:
         return len(self._d)
 
-    def get(self, key: Key) -> Optional[bool]:
+    def get(self, key: Key, mr_len: Optional[int] = None) -> Optional[bool]:
         """Answer if cached and fresh (refreshing recency), else ``None``."""
         if self.capacity == 0:
             self.stats.misses += 1
+            self.stats.record(mr_len, hit=False)
             self._m_miss.inc()
             return None
         try:
             val, stamp = self._d[key]
         except KeyError:
             self.stats.misses += 1
+            self.stats.record(mr_len, hit=False)
             self._m_miss.inc()
+            if mr_len is not None:
+                self._m_mr.labels(outcome="miss", mr_len=mr_len).inc()
             return None
         if self.ttl_s is not None and self.clock() - stamp >= self.ttl_s:
             del self._d[key]
+            # expired is its own outcome: the lookup found a (stale)
+            # entry, so it is neither a hit nor a plain miss — it still
+            # dilutes hit_rate via CacheStats.lookups
             self.stats.expirations += 1
-            self.stats.misses += 1
+            self.stats.record(mr_len, hit=False)
             self._m_expired.inc()
-            self._m_miss.inc()
+            if mr_len is not None:
+                self._m_mr.labels(outcome="expired", mr_len=mr_len).inc()
             return None
         self._d.move_to_end(key)
         self.stats.hits += 1
+        self.stats.record(mr_len, hit=True)
         self._m_hit.inc()
+        if mr_len is not None:
+            self._m_mr.labels(outcome="hit", mr_len=mr_len).inc()
         return val
 
     def peek(self, key: Key) -> Optional[bool]:
@@ -130,17 +168,31 @@ class ResultCache:
             return None
         return val
 
-    def put(self, key: Key, value: bool) -> None:
+    def put(self, key: Key, value: bool,
+            mr_len: Optional[int] = None) -> None:
         if self.capacity == 0:
             return
         if key in self._d:
             self._d.move_to_end(key)
-        self._d[key] = (bool(value), self.clock())
+        now = self.clock()
+        self._d[key] = (bool(value), now)
         while len(self._d) > self.capacity:
-            self._d.popitem(last=False)
+            _k, (_v, stamp) = self._d.popitem(last=False)
             self.stats.evictions += 1
             self._m_evict.inc()
+            age = max(now - stamp, 0.0)
+            self.eviction_ages.add(age)
+            self._m_evict_age.observe(age)
         self._m_size.set(len(self._d))
+
+    def hit_rate_by_mr_len(self) -> Dict[int, float]:
+        """Per-MR-length hit rates — the warmer's priority input."""
+        return self.stats.hit_rate_by_mr_len()
+
+    def eviction_age_summary(self) -> dict:
+        """Percentiles of entry age at LRU eviction: a low p50 means the
+        capacity is churning entries before they can be re-hit."""
+        return self.eviction_ages.summary()
 
     def invalidate_rows(self, dirty_s=None, dirty_t=None) -> int:
         """Evict every key whose source row is in ``dirty_s`` or target

@@ -202,13 +202,31 @@ class BatchExecutor:
                                          max_hubs=max_hubs))
         return ws, "python"
 
+    @staticmethod
+    def _pad_pow2(s, t, mr_id, n: int):
+        """Pad a real-length batch to the next power of two by repeating
+        slot 0 — batches arrive unpadded from the scheduler, and the jit
+        backends need a bounded shape set ({1, 2, 4, ...}) to avoid
+        re-tracing per fill level. Slot 0 is always a valid query; the
+        caller slices answers back to ``n``."""
+        cap = 1
+        while cap < n:
+            cap <<= 1
+        if cap == len(s):
+            return s, t, mr_id
+        pad = lambda a: np.concatenate(  # noqa: E731
+            [np.asarray(a[:n]), np.full(cap - n, a[0], dtype=a.dtype)])
+        return pad(s), pad(t), pad(mr_id)
+
     def _run(self, backend: str, s, t, mr_id, n: int) -> np.ndarray:
-        # Padding only exists to keep a static jit shape for the device
-        # backends; the per-query loop backends skip the padded slots.
+        # The device backends get pow2-padded shapes (static jit set);
+        # the per-query loop backends run exactly the real slots.
         if backend == "pallas":
+            s, t, mr_id = self._pad_pow2(s, t, mr_id, n)
             return self.device_index.query_batch(s, t, mr_id,
                                                  use_pallas=True)
         if backend == "sorted":
+            s, t, mr_id = self._pad_pow2(s, t, mr_id, n)
             return self.device_index.query_batch(s, t, mr_id,
                                                  method="sorted")
         if backend == "numpy":

@@ -10,9 +10,17 @@ Zipf-heavy short constraints don't ride in batches padded for long ones,
 and per-bucket arrival rates stay observable. A batch flushes when it is
 full (``batch_size`` requests) or when its oldest request has waited
 ``max_wait_s`` (deadline flush, checked by :meth:`MicroBatcher.poll`).
-Underfull deadline flushes are padded by repeating the first request up to
-``batch_size`` — always a valid query, and keeping one static batch shape
-avoids jit re-tracing (padding answers are sliced off).
+Both limits are per-bucket overridable via ``params_fn`` — the hook the
+SLO batch controller (:mod:`repro.service.control`) uses to size batches
+and deadlines per MR length from observed queue-wait/compute costs.
+
+Flushed batches carry exactly their real requests — underfull deadline
+flushes are *not* padded to ``batch_size`` (repeating the first request
+used to burn executor slots on every deadline flush; the executor now
+pads to a power-of-two internally for the jit backends, which bounds the
+number of compiled shapes without recomputing duplicate slots). The
+``rlc_batcher_padding_ratio`` histogram records padded/total slots per
+flush so the waste stays provably gone.
 
 Duplicate in-flight keys are *coalesced*: submitting a ``(s, t, mr_id)``
 already queued returns the queued :class:`Request` instead of occupying a
@@ -62,10 +70,10 @@ class Request:
 
 @dataclass
 class Batch:
-    """A padded, launch-ready batch of same-``|MR|`` requests."""
+    """A launch-ready batch of same-``|MR|`` requests (real slots only)."""
 
     requests: List[Request]     # the real requests, in admission order
-    s: np.ndarray               # (batch_size,) int32, padded
+    s: np.ndarray               # (n_real,) int32 — no padding slots
     t: np.ndarray
     mr_id: np.ndarray
     mr_len: int
@@ -84,13 +92,19 @@ class Batch:
 
 class MicroBatcher:
     def __init__(self, batch_size: int, max_wait_s: float = 0.002,
-                 clock: Callable[[], float] = time.monotonic, obs=None):
+                 clock: Callable[[], float] = time.monotonic, obs=None,
+                 params_fn: Optional[
+                     Callable[[int], Tuple[int, float]]] = None):
         if batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got {batch_size}")
         if max_wait_s < 0:
             raise ValueError(f"max_wait_s must be >= 0, got {max_wait_s}")
         self.batch_size = batch_size
         self.max_wait_s = max_wait_s
+        #: optional per-MR-length override: ``mr_len -> (batch_size,
+        #: max_wait_s)`` — the SLO controller's entry point; ``None``
+        #: keeps the fixed constructor values for every bucket
+        self.params_fn = params_fn
         self.clock = clock
         self._buckets: Dict[int, List[Request]] = {}
         self._inflight: Dict[Tuple[int, int, int], Request] = {}
@@ -128,6 +142,22 @@ class MicroBatcher:
             labelnames=("reason",))
         self._m_fill = {r: fill.labels(reason=r)
                         for r in ("full", "deadline", "drain")}
+        self._m_padding = reg.histogram(
+            "rlc_batcher_padding_ratio",
+            desc="padded slots / total slots per flushed batch "
+                 "(0 since underfull flushes stopped padding)",
+            unit="1").labels()
+        self._m_evicted = reg.counter(
+            "rlc_batcher_evicted",
+            desc="queued requests evicted pre-flush by admission "
+                 "control").labels()
+
+    # ------------------------------------------------------------------ #
+    def params(self, mr_len: int) -> Tuple[int, float]:
+        """Effective ``(batch_size, max_wait_s)`` for one bucket."""
+        if self.params_fn is None:
+            return self.batch_size, self.max_wait_s
+        return self.params_fn(mr_len)
 
     # ------------------------------------------------------------------ #
     def submit(self, s: int, t: int, mr_id: int, mr_len: int,
@@ -155,7 +185,8 @@ class MicroBatcher:
             bucket.append(req)
             self._inflight[key] = req
             out: List[Batch] = []
-            if len(bucket) >= self.batch_size:
+            cap, _wait = self.params(mr_len)
+            if len(bucket) >= cap:
                 out.append(self._flush_bucket(mr_len, "full"))
             # An admission is also a natural poll point for other buckets.
             out.extend(self.poll(now))
@@ -168,7 +199,10 @@ class MicroBatcher:
             out: List[Batch] = []
             for mr_len in list(self._buckets):
                 bucket = self._buckets[mr_len]
-                if bucket and now - bucket[0].enqueued_at >= self.max_wait_s:
+                if not bucket:
+                    continue
+                _cap, wait = self.params(mr_len)
+                if now - bucket[0].enqueued_at >= wait:
                     out.append(self._flush_bucket(mr_len, "deadline"))
             return out
 
@@ -181,6 +215,52 @@ class MicroBatcher:
     def pending(self) -> int:
         with self._lock:
             return sum(len(b) for b in self._buckets.values())
+
+    def evict(self, req: Request) -> bool:
+        """Remove one still-queued request before it flushes (admission
+        control sheds it in favor of a higher-priority arrival). Returns
+        ``False`` when the request already flushed or was coalesced away
+        — the caller must then answer it normally."""
+        with self._lock:
+            bucket = self._buckets.get(req.mr_len)
+            if not bucket:
+                return False
+            for i, r in enumerate(bucket):
+                if r.req_id == req.req_id:
+                    del bucket[i]
+                    self._inflight.pop(r.key, None)
+                    self._m_evicted.inc()
+                    return True
+            return False
+
+    def lowest_priority_pending(
+            self, score_fn: Callable[[Request], float]
+    ) -> Optional[Request]:
+        """The queued request minimizing ``score_fn`` (admission control's
+        eviction victim scan), or ``None`` when nothing is queued."""
+        with self._lock:
+            worst: Optional[Request] = None
+            worst_score = float("inf")
+            for bucket in self._buckets.values():
+                for r in bucket:
+                    sc = score_fn(r)
+                    if sc < worst_score:
+                        worst, worst_score = r, sc
+            return worst
+
+    def median_pending_priority(
+            self, score_fn: Callable[[Request], float]
+    ) -> Optional[float]:
+        """Lower-median ``score_fn`` over queued requests (the
+        back-pressure shed threshold — lower, so that in a uniform-
+        priority queue arrivals at that priority still shed), or
+        ``None`` when the queue is empty."""
+        with self._lock:
+            scores = sorted(score_fn(r) for bucket in self._buckets.values()
+                            for r in bucket)
+            if not scores:
+                return None
+            return scores[(len(scores) - 1) // 2]
 
     def is_inflight(self, key: Tuple[int, int, int]) -> bool:
         """Whether ``(s, t, mr_id)`` is queued awaiting a flush — i.e. a
@@ -238,7 +318,8 @@ class MicroBatcher:
     # ------------------------------------------------------------------ #
     def _flush_bucket(self, mr_len: int, reason: str) -> Batch:
         bucket = self._buckets[mr_len]
-        reqs, rest = bucket[:self.batch_size], bucket[self.batch_size:]
+        cap, _wait = self.params(mr_len)
+        reqs, rest = bucket[:cap], bucket[cap:]
         self._buckets[mr_len] = rest
         for r in reqs:
             self._inflight.pop(r.key, None)
@@ -254,11 +335,10 @@ class MicroBatcher:
         wait_cell = self._m_wait[reason]
         for r in reqs:
             wait_cell.observe(now - r.enqueued_at)
-        B = self.batch_size
-        s = np.empty(B, np.int32)
-        t = np.empty(B, np.int32)
-        mr = np.empty(B, np.int32)
-        for i in range(B):
-            r = reqs[min(i, len(reqs) - 1)]  # pad by repeating the first/last
-            s[i], t[i], mr[i] = r.s, r.t, r.mr_id
+        # real slots only — the executor pads jit backends internally
+        self._m_padding.observe(0.0)
+        n = len(reqs)
+        s = np.fromiter((r.s for r in reqs), np.int32, n)
+        t = np.fromiter((r.t for r in reqs), np.int32, n)
+        mr = np.fromiter((r.mr_id for r in reqs), np.int32, n)
         return Batch(reqs, s, t, mr, mr_len, reason, flushed_at=now)

@@ -16,8 +16,11 @@ returning, so every admitted query is answered in admission order.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
 
 from repro.build import BuildStats, build_rlc_index_with_stats
 from repro.core.graph import LabeledGraph
@@ -26,12 +29,16 @@ from repro.core.rlc_index import RLCIndex
 from repro.obs import Observability
 
 from .cache import ResultCache
+from .control import SHED, ControlPlane
 from .executor import BatchExecutor
 from .expr import PathExpression, canonicalize, parse_expression
-from .scheduler import Batch, MicroBatcher
+from .scheduler import Batch, MicroBatcher, Request
 
 Constraint = Union[str, Sequence[int], PathExpression]
 Query = Tuple[int, int, Constraint]
+#: a query_batch answer: a boolean, or the SHED sentinel when admission
+#: control dropped the query (check ``ans is SHED`` — SHED refuses bool())
+Answer = Union[bool, object]
 
 
 @dataclass
@@ -63,6 +70,31 @@ class ServiceConfig:
     #: run shadow checks on a background thread (else they run when
     #: drained explicitly or at snapshot time)
     shadow_background: bool = False
+    # -- control plane (repro.service.control) --------------------------- #
+    #: per-query p99 latency SLO; setting it turns on the SLO batch
+    #: controller (per-MR-length batch sizes + deadlines replace the
+    #: fixed batch_size/max_wait_ms above)
+    target_p99_ms: Optional[float] = None
+    #: minimum time between controller parameter recomputations
+    control_interval_s: float = 0.05
+    #: ceiling for controller-grown batch sizes (None -> 4 * batch_size)
+    max_batch_size: Optional[int] = None
+    #: hard admission bound: scheduler pending depth past which arrivals
+    #: are shed (or evict a lower-priority queued request); None = off
+    admission_max_pending: Optional[int] = None
+    #: soft back-pressure: shed low-priority arrivals while the EWMA
+    #: queue wait exceeds this (None -> 2 * target_p99_ms when the SLO
+    #: controller is on, else off)
+    admission_backpressure_ms: Optional[float] = None
+    #: hot-key candidates tracked for warming; > 0 turns the prioritized
+    #: cache warmer on (it runs after apply_delta / hot_swap)
+    warm_capacity: int = 0
+    #: warming budgets: estimated cache bytes written / wall seconds
+    warm_budget_bytes: int = 1 << 20
+    warm_budget_s: float = 0.25
+    #: injectable scheduler clock (e.g. control.VirtualClock for open-loop
+    #: overload replay); None = time.monotonic
+    clock: Optional[Callable[[], float]] = None
 
 
 class RLCService:
@@ -97,10 +129,16 @@ class RLCService:
             backend=config.backend, obs=self.obs)
         self.cache = ResultCache(config.cache_capacity,
                                  ttl_s=config.cache_ttl_s, obs=self.obs)
-        self.batcher = MicroBatcher(config.batch_size,
-                                    config.max_wait_ms * 1e-3,
-                                    obs=self.obs)
+        clock = config.clock if config.clock is not None else time.monotonic
+        self.ctl = ControlPlane.from_config(
+            config, self.obs, self.cache, self._warm_execute, clock)
+        self.batcher = MicroBatcher(
+            config.batch_size, config.max_wait_ms * 1e-3,
+            clock=clock, obs=self.obs,
+            params_fn=(self.ctl.slo.params
+                       if self.ctl.slo is not None else None))
         self.queries_served = 0
+        self.queries_shed = 0
         self.deltas_applied = 0
         self._delta = None          # lazy DeltaBuilder (apply_delta)
         self._closed = False
@@ -160,13 +198,21 @@ class RLCService:
         return self.query_batch([(s, t, constraint)])[0]
 
     def query_batch(self, queries: Sequence[Query],
-                    now: Optional[float] = None) -> List[bool]:
+                    now: Optional[float] = None) -> List[Answer]:
         """Answer ``queries`` in order through cache + scheduler + executor.
 
         ``now``: optional admission timestamp (for replaying a timed
         arrival trace); defaults to the scheduler's clock per admission.
+
+        With admission control on (``admission_max_pending`` /
+        ``admission_backpressure_ms``), a dropped query's answer is the
+        :data:`SHED` sentinel — never a fabricated boolean; check
+        ``ans is SHED`` (SHED raises on ``bool()``). Eviction of queued
+        victims assumes the synchronous single-caller contract this
+        method already requires (see the lost-answer guard below): a
+        victim admitted by a concurrent call would trip that guard there.
         """
-        answers: List[Optional[bool]] = [None] * len(queries)
+        answers: List[Optional[Answer]] = [None] * len(queries)
         # canonical (s, t, mr_id) per position, kept only when the shadow
         # verifier wants to sample answered queries afterwards
         keys: Optional[List[Tuple[int, int, int]]] = (
@@ -177,12 +223,17 @@ class RLCService:
         # one sampled trace per query_batch call; None on the unsampled
         # hot path, so every span below is a single comparison away
         tr = self.obs.tracer.maybe_trace()
+        admission = self.ctl.admission
         for i, (s, t, constraint) in enumerate(queries):
             t0 = tr.tracer._now() if tr is not None else 0.0
             s, t, mr_id, mr_len = self._admit(s, t, constraint)
             if keys is not None:
                 keys[i] = (s, t, mr_id)
-            hit = self.cache.get((s, t, mr_id))
+            # the frequency sketch counts every arrival (hits included):
+            # key popularity is a property of the workload, not of the
+            # cache's current contents
+            self.ctl.observe_admit((s, t, mr_id), mr_len)
+            hit = self.cache.get((s, t, mr_id), mr_len=mr_len)
             if tr is not None:
                 tr.add(f"admit[{i}]", t0, tr.tracer._now() - t0,
                        cat="admission", mr_len=mr_len,
@@ -190,6 +241,16 @@ class RLCService:
             if hit is not None:
                 answers[i] = hit
                 continue
+            if admission is not None:
+                decision, victim = admission.decide(
+                    (s, t, mr_id), mr_len, self.batcher)
+                if decision == "shed":
+                    answers[i] = SHED
+                    continue
+                if decision == "evict" and self.batcher.evict(victim):
+                    # the victim's submitters get the explicit SHED
+                    for pos in slot.pop(victim.req_id, ()):
+                        answers[pos] = SHED
             req, ready = self.batcher.submit(s, t, mr_id, mr_len, now)
             slot.setdefault(req.req_id, []).append(i)
             for batch in ready:
@@ -205,10 +266,12 @@ class RLCService:
                 "share a ticker-driven or concurrent MicroBatcher with "
                 "synchronous query_batch")
         self.queries_served += len(queries)
-        out = [bool(a) for a in answers]
+        out: List[Answer] = [a if a is SHED else bool(a) for a in answers]
+        self.queries_shed += sum(1 for a in out if a is SHED)
         if keys is not None:
             for (s, t, mr_id), ans in zip(keys, out):
-                self._shadow.offer(s, t, mr_id, ans)
+                if ans is not SHED:     # no answer to verify
+                    self._shadow.offer(s, t, mr_id, ans)
         return out
 
     def _run_batch(self, batch: Batch, tr=None):
@@ -218,8 +281,22 @@ class RLCService:
             batch.s, batch.t, batch.mr_id, batch.n_real, trace=tr)
         return ans
 
-    def _execute(self, batch: Batch, answers: List[Optional[bool]],
+    def _warm_execute(self, s: np.ndarray, t: np.ndarray,
+                      mr_id: np.ndarray, mr_len: int) -> np.ndarray:
+        """Cache-warmer execution hook: answer hot keys through the same
+        batch path queries take (the sharded override of ``_run_batch``
+        fans warm batches across shards too). Bypasses the scheduler —
+        warming is off the serving critical path by construction."""
+        reqs = [Request(-1 - i, int(s[i]), int(t[i]), int(mr_id[i]),
+                        int(mr_len)) for i in range(len(s))]
+        batch = Batch(reqs, np.asarray(s, np.int32),
+                      np.asarray(t, np.int32),
+                      np.asarray(mr_id, np.int32), int(mr_len), "warm")
+        return np.asarray(self._run_batch(batch), dtype=bool)
+
+    def _execute(self, batch: Batch, answers: List[Optional[Answer]],
                  slot: Dict[int, List[int]], tr=None) -> None:
+        t0 = time.perf_counter()
         if tr is not None:
             # queue wait is measured on the scheduler's clock; only the
             # duration crosses into the tracer's timeline
@@ -233,9 +310,18 @@ class RLCService:
                 vals = self._run_batch(batch, tr)
         else:
             vals = self._run_batch(batch)
+        exec_s = time.perf_counter() - t0
+        # feed the control loops (SLO EWMAs, back-pressure queue waits);
+        # a VirtualClock scheduler clock also advances by the measured
+        # execute time so open-loop replay accumulates realistic waits
+        self.ctl.on_batch_executed(batch, exec_s)
+        advance = getattr(self.batcher.clock, "advance", None)
+        if advance is not None:
+            advance(exec_s)
         for req, val in zip(batch.requests, vals):
             val = bool(val)
-            self.cache.put((req.s, req.t, req.mr_id), val)
+            self.cache.put((req.s, req.t, req.mr_id), val,
+                           mr_len=batch.mr_len)
             for pos in slot.get(req.req_id, ()):
                 answers[pos] = val
 
@@ -349,6 +435,9 @@ class RLCService:
         ``(s, t)`` rows went dirty — everything else keeps serving from
         cache. Returns a summary dict (delta accounting + evictions).
         """
+        # fence in-flight warm work first: answers computed against the
+        # pre-delta index must never land in the post-delta cache
+        self.ctl.bump_epoch()
         db = self._ensure_delta_builder()
         res = db.apply(delta)
         self.graph = db.graph
@@ -383,10 +472,14 @@ class RLCService:
             # oracle now walks the mutated graph, so they'd diverge
             # spuriously
             self._shadow.discard_pending()
+        # re-materialize the hot Zipf head against the new index, under
+        # the warmer's byte/time budget (no-op when warming is off)
+        warm = self.ctl.warm("apply_delta")
         return dict(delta=res.as_dict(), cache_evicted=evicted,
                     dirty_out=res.dirty_out.tolist(),
                     dirty_in=res.dirty_in.tolist(),
-                    deltas_applied=self.deltas_applied)
+                    deltas_applied=self.deltas_applied,
+                    warm=warm)
 
     # -- shutdown --------------------------------------------------------- #
     def close(self) -> None:
@@ -459,6 +552,7 @@ class RLCService:
         """
         return dict(
             queries_served=self.queries_served,
+            queries_shed=self.queries_shed,
             deltas_applied=self.deltas_applied,
             cache=self.cache.stats.as_dict(),
             executor=dict(
@@ -470,6 +564,7 @@ class RLCService:
                 batches_drain=self.batcher.batches_drain,
                 coalesced=self.batcher.coalesced,
                 pending=self.batcher.pending()),
+            control=self.ctl.stats(),
             build=(self.build_stats.as_dict()
                    if self.build_stats is not None else None),
             index=dict(

@@ -20,6 +20,14 @@ back into admission order:
 Sub-batches are padded to the next power of two (capped at the admission
 batch size) by repeating their first request, so each shard pair sees a
 small, bounded set of jit shapes instead of one per sub-batch length.
+
+When either side's replica set is mid-swap (``ShardReplicaSet.swapping``),
+the sub-batch gracefully degrades to the online BiBFS fallback on the
+live graph instead of racing the rolling publish — exact answers (BiBFS
+is the oracle), just slower, counted in ``rlc_fanout_degraded``. Requires
+the executor to be constructed with ``graph``/``id_to_mr``; without them
+the degrade path is unavailable and sub-batches acquire replicas as
+before.
 """
 from __future__ import annotations
 
@@ -51,15 +59,19 @@ def _pad_pow2(vals: List[int], cap: int) -> np.ndarray:
 
 class ScatterGatherExecutor:
     def __init__(self, shards: List[ShardReplicaSet],
-                 router: TwoSidedRouter, batch_size: int, obs=None):
+                 router: TwoSidedRouter, batch_size: int, obs=None,
+                 graph=None, id_to_mr=None):
         self.shards = shards
         self.router = router
         self.batch_size = batch_size
+        self.graph = graph          # live graph for the BiBFS degrade path
+        self.id_to_mr = id_to_mr
         self.recorders = dict(local=LatencyRecorder("local"),
                               remote=LatencyRecorder("remote"))
         self.sub_batches: Dict[Tuple[int, int], int] = {}
         self.remote_joins_device = 0
         self.remote_joins_numpy = 0
+        self.degraded = 0       # sub-batches answered by BiBFS mid-swap
         self.digest_bytes = 0   # simulated cross-host traffic
         self.obs = obs or NULL_OBS
         reg = self.obs.registry
@@ -76,6 +88,24 @@ class ScatterGatherExecutor:
                             labelnames=("path",))
         self._m_join = {p: joins.labels(path=p)
                         for p in ("device", "numpy")}
+        self._m_degraded = reg.counter(
+            "rlc_fanout_degraded",
+            desc="sub-batches degraded to online BiBFS because a shard "
+                 "replica set was mid-swap").labels()
+
+    def _degrade_bibfs(self, reqs, idxs) -> np.ndarray:
+        """Answer one sub-batch by online bidirectional BFS on the live
+        graph — the mid-swap fallback. Exact (BiBFS is the oracle), so
+        answers stay bit-identical to the index path."""
+        from repro.core.baselines import bibfs_rlc
+        out = np.zeros(len(idxs), dtype=bool)
+        for j, q in enumerate(idxs):
+            r = reqs[q]
+            out[j] = bibfs_rlc(self.graph, r.s, r.t,
+                               self.id_to_mr[r.mr_id])
+        self.degraded += 1
+        self._m_degraded.inc()
+        return out
 
     # ------------------------------------------------------------------ #
     def execute(self, batch: Batch, trace=None) -> np.ndarray:
@@ -95,6 +125,19 @@ class ScatterGatherExecutor:
         answers = np.zeros(len(reqs), dtype=bool)
         for (ss, st), idxs in sorted(groups.items()):
             self.sub_batches[(ss, st)] = self.sub_batches.get((ss, st), 0) + 1
+            if (self.graph is not None and self.id_to_mr is not None
+                    and (self.shards[ss].swapping
+                         or self.shards[st].swapping)):
+                t0 = time.perf_counter()
+                ans = self._degrade_bibfs(reqs, idxs)
+                dt = time.perf_counter() - t0
+                self.recorders["local"].record(dt, len(idxs))
+                if trace is not None:
+                    trace.add(f"sub[{ss}->{st}]",
+                              trace.tracer._now() - dt, dt, cat="fanout",
+                              n=len(idxs), path="degraded")
+                answers[np.asarray(idxs)] = ans
+                continue
             s = _pad_pow2([reqs[q].s for q in idxs], self.batch_size)
             t = _pad_pow2([reqs[q].t for q in idxs], self.batch_size)
             mr = _pad_pow2([reqs[q].mr_id for q in idxs], self.batch_size)
@@ -192,5 +235,6 @@ class ScatterGatherExecutor:
                          for (a, b), c in sorted(self.sub_batches.items())},
             remote_joins_device=self.remote_joins_device,
             remote_joins_numpy=self.remote_joins_numpy,
+            degraded=self.degraded,
             digest_bytes=self.digest_bytes,
         )

@@ -120,6 +120,10 @@ class ShardReplicaSet:
         self.replicas = replicas
         self._rr = itertools.count()
         self._swap_lock = threading.Lock()
+        #: True while :meth:`swap` is rebuilding this shard's replicas —
+        #: the fan-out's signal to degrade new sub-batches to the online
+        #: BiBFS fallback instead of racing the rolling publish
+        self.swapping = False
         self.swaps = 0
         self.last_build_backend: Optional[str] = None
         self.obs = obs
@@ -151,37 +155,47 @@ class ShardReplicaSet:
         ``build_backend`` records which :mod:`repro.build` backend
         produced the incoming index (surfaced in :meth:`stats`)."""
         with self._swap_lock:
-            self.last_build_backend = build_backend
-            # one device pack per (shard, generation, device); replicas on
-            # the same device share the immutable layout
-            layouts = {}
-            if use_device:
-                for old in self.replicas:
-                    if old.device not in layouts:
-                        layouts[old.device] = build_device_layout(
-                            frozen_slice, mr_ids, rows=(self.lo, self.hi),
-                            device=old.device)
-            for i, old in enumerate(list(self.replicas)):
-                fresh = build_replica(
-                    self.shard_id, old.replica_id, generation, frozen_slice,
-                    mr_ids, index, id_to_mr, backend=backend,
-                    use_device=use_device, device=old.device,
-                    rows=(self.lo, self.hi),
-                    shared_device_index=layouts.get(old.device),
-                    obs=self.obs)
-                # bank the outgoing replica's counters before the publish:
-                # the fresh executor starts at zero, the set-level totals
-                # must not
-                self._carried_fallbacks += old.executor.fallbacks
-                for b, rec in old.executor.recorders.items():
-                    if rec.batches:
-                        self._carried_batches[b] = (
-                            self._carried_batches.get(b, 0) + rec.batches)
-                        self._carried_queries[b] = (
-                            self._carried_queries.get(b, 0) + rec.queries)
-                # single reference assignment = the atomic publish point
-                self.replicas[i] = fresh
-            self.swaps += 1
+            self.swapping = True
+            try:
+                self._swap_locked(generation, frozen_slice, mr_ids, index,
+                                  id_to_mr, backend, use_device,
+                                  build_backend)
+            finally:
+                self.swapping = False
+
+    def _swap_locked(self, generation, frozen_slice, mr_ids, index,
+                     id_to_mr, backend, use_device, build_backend) -> None:
+        self.last_build_backend = build_backend
+        # one device pack per (shard, generation, device); replicas on
+        # the same device share the immutable layout
+        layouts = {}
+        if use_device:
+            for old in self.replicas:
+                if old.device not in layouts:
+                    layouts[old.device] = build_device_layout(
+                        frozen_slice, mr_ids, rows=(self.lo, self.hi),
+                        device=old.device)
+        for i, old in enumerate(list(self.replicas)):
+            fresh = build_replica(
+                self.shard_id, old.replica_id, generation, frozen_slice,
+                mr_ids, index, id_to_mr, backend=backend,
+                use_device=use_device, device=old.device,
+                rows=(self.lo, self.hi),
+                shared_device_index=layouts.get(old.device),
+                obs=self.obs)
+            # bank the outgoing replica's counters before the publish:
+            # the fresh executor starts at zero, the set-level totals
+            # must not
+            self._carried_fallbacks += old.executor.fallbacks
+            for b, rec in old.executor.recorders.items():
+                if rec.batches:
+                    self._carried_batches[b] = (
+                        self._carried_batches.get(b, 0) + rec.batches)
+                    self._carried_queries[b] = (
+                        self._carried_queries.get(b, 0) + rec.queries)
+            # single reference assignment = the atomic publish point
+            self.replicas[i] = fresh
+        self.swaps += 1
 
     @property
     def fallbacks(self) -> int:

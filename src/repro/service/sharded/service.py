@@ -17,6 +17,7 @@ See :mod:`repro.service.sharded` for the routing invariant and
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import List, Optional
 
@@ -29,6 +30,7 @@ from repro.core.rlc_index import RLCIndex
 from repro.obs import Observability
 
 from ..cache import ResultCache
+from ..control import ControlPlane
 from ..scheduler import Batch, MicroBatcher
 from ..service import RLCService, ServiceConfig
 from .fanout import ScatterGatherExecutor
@@ -93,14 +95,22 @@ class ShardedRLCService:
             self.shards.append(
                 ShardReplicaSet(sid, lo, hi, replicas, obs=self.obs))
         self.router = TwoSidedRouter(self.plan, obs=self.obs)
-        self.fanout = ScatterGatherExecutor(self.shards, self.router,
-                                            config.batch_size, obs=self.obs)
+        self.fanout = ScatterGatherExecutor(
+            self.shards, self.router, config.batch_size, obs=self.obs,
+            graph=graph, id_to_mr=self._id_to_mr)
         self.cache = ResultCache(config.cache_capacity,
                                  ttl_s=config.cache_ttl_s, obs=self.obs)
-        self.batcher = MicroBatcher(config.batch_size,
-                                    config.max_wait_ms * 1e-3,
-                                    obs=self.obs)
+        clock = (config.clock if config.clock is not None
+                 else time.monotonic)
+        self.ctl = ControlPlane.from_config(
+            config, self.obs, self.cache, self._warm_execute, clock)
+        self.batcher = MicroBatcher(
+            config.batch_size, config.max_wait_ms * 1e-3,
+            clock=clock, obs=self.obs,
+            params_fn=(self.ctl.slo.params
+                       if self.ctl.slo is not None else None))
         self.queries_served = 0
+        self.queries_shed = 0
         self.deltas_applied = 0
         self._delta = None          # lazy DeltaBuilder (apply_delta)
         self._closed = False
@@ -142,6 +152,7 @@ class ShardedRLCService:
     query = RLCService.query
     query_batch = RLCService.query_batch
     _execute = RLCService._execute
+    _warm_execute = RLCService._warm_execute
     _delta_backend_name = RLCService._delta_backend_name
     _ensure_delta_builder = RLCService._ensure_delta_builder
     explain = RLCService.explain
@@ -211,9 +222,13 @@ class ShardedRLCService:
         replicas and only repoint the always-available python-fallback
         index. Cached answers are evicted only for dirty ``(s, t)`` rows.
         """
+        # fence in-flight warm work before any state moves (see
+        # RLCService.apply_delta)
+        self.ctl.bump_epoch()
         db = self._ensure_delta_builder()
         res = db.apply(delta)
         self.graph = db.graph
+        self.fanout.graph = self.graph   # mid-swap BiBFS walks the live graph
         self.index = db.index
         self.build_stats = res.stats
         if res.fallback:
@@ -265,10 +280,12 @@ class ShardedRLCService:
             # pre-delta answers may legitimately differ from the mutated
             # graph's oracle (see RLCService.apply_delta)
             self._shadow.discard_pending()
+        warm = self.ctl.warm("apply_delta")
         return dict(delta=res.as_dict(), shards_touched=touched,
                     dirty_out=res.dirty_out.tolist(),
                     dirty_in=res.dirty_in.tolist(),
-                    cache_evicted=evicted, generation=self.generation)
+                    cache_evicted=evicted, generation=self.generation,
+                    warm=warm)
 
     # -- hot swap -------------------------------------------------------- #
     def hot_swap(self, index: Optional[RLCIndex] = None,
@@ -288,6 +305,9 @@ class ShardedRLCService:
         new generation number.
         """
         build_backend = build_backend or self.config.build_backend
+        # a swap invalidates any in-flight warm pass the same way a delta
+        # does — its answers were computed against the outgoing index
+        self.ctl.bump_epoch()
         rebuilt = False
         if index is not None:
             # adopted pre-built index: we didn't build it, don't claim to
@@ -306,6 +326,7 @@ class ShardedRLCService:
                     observer=self.obs.build_observer("swap"))
                 rebuilt = True
             self.graph = graph
+            self.fanout.graph = graph
         if index is None:
             index = self.index
         if index.k != self.config.k:
@@ -333,6 +354,10 @@ class ShardedRLCService:
         # drop it so the next apply_delta re-bootstraps from the swapped
         # state instead of silently reverting the swap
         self._delta = None
+        # refill the hot Zipf head against the swapped index (the clear
+        # above just cold-started the whole cache); no-op when warming
+        # is off
+        self.ctl.warm("hot_swap")
         return self.generation
 
     # -- observability --------------------------------------------------- #
@@ -368,6 +393,7 @@ class ShardedRLCService:
         """The RLCService stats shape plus per-shard breakdowns."""
         return dict(
             queries_served=self.queries_served,
+            queries_shed=self.queries_shed,
             deltas_applied=self.deltas_applied,
             cache=self.cache.stats.as_dict(),
             executor=self.fanout.stats(),
@@ -377,6 +403,7 @@ class ShardedRLCService:
                 batches_drain=self.batcher.batches_drain,
                 coalesced=self.batcher.coalesced,
                 pending=self.batcher.pending()),
+            control=self.ctl.stats(),
             router=self.router.stats(),
             build=(self.build_stats.as_dict()
                    if self.build_stats is not None else None),

@@ -224,7 +224,10 @@ def _write_artifacts(d, qps=100.0, swap=0.1):
             sorted=dict(qps=qps), numpy=dict(qps=qps / 2),
             cache_4096=dict(hit_rate=0.9, qps=qps * 2))),
         "sharded.json": dict(results=dict(
-            shards_2=dict(qps=qps), hot_swap=dict(swap_s=swap))),
+            shards_2=dict(qps=qps), hot_swap=dict(swap_s=swap),
+            slo=dict(p99_over_p50=1.5),
+            overload=dict(shed_ratio=0.1),
+            warming=dict(warm_hit_rate=0.6))),
         "indexing.json": dict(aggregate_s=dict(python=2.0, numpy=0.4),
                               numpy_aggregate_speedup=5.0,
                               parallel_speedup=1.8),

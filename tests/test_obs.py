@@ -520,11 +520,27 @@ def test_run_py_validates_telemetry_artifacts(tmp_path, monkeypatch):
     audit = svc.audit_report(sample=16)
     good["extra"] = dict(audit=audit, shadow=dict(divergent=0, checked=4))
 
+    # minimal control-plane stages satisfying run.py's control_stages_ok
+    control = dict(
+        slo=dict(shed=0, p99_over_p50=1.5),
+        overload=dict(shed_ratio=0.1, underload_shed=0,
+                      answers_match_oracle=True,
+                      underload=dict(answers_match_oracle=True)),
+        warming=dict(cold_hit_rate=0.3, warm_hit_rate=0.6))
     write("service.json", dict(results=dict(numpy=dict(telemetry=good))))
-    write("sharded.json", dict(results=dict(shards_2=dict(telemetry=good))))
+    write("sharded.json", dict(results=dict(
+        shards_2=dict(telemetry=good), **control)))
     write("sharded_trace.json", trace)
     assert bench_run.validate_telemetry_artifacts(["service",
                                                    "sharded"]) == []
+    # a control-plane invariant violation must fail the smoke run
+    broken = dict(control, slo=dict(shed=3, p99_over_p50=1.5))
+    write("sharded.json", dict(results=dict(
+        shards_2=dict(telemetry=good), **broken)))
+    fails = bench_run.validate_telemetry_artifacts(["sharded"])
+    assert any(name == "sharded:control" for name, _err in fails)
+    write("sharded.json", dict(results=dict(
+        shards_2=dict(telemetry=good), **control)))
     # a snapshot that stops validating must fail the smoke run
     bad = json.loads(json.dumps(good))
     bad["schema"] = "repro.obs/999"

@@ -32,6 +32,15 @@ Three control-plane stages exercise :mod:`repro.service.control`:
   off vs on; records the cache hit rate over the first 100 post-swap
   requests for each.
 
+Two RPC stages measure true multi-process serving
+(``transport="rpc"``): ``rpc`` serves the stream through shard-host
+worker processes — per-call wire round-trip p50/p99, digest bytes on
+the wire, and an oracle check that every answer is bit-identical to the
+single-process service; ``rpc_async`` pushes the same stream through
+non-blocking ``submit()`` futures and records the engine's overlap
+ledger (``overlap_s`` — execution time spent while admission was still
+running). Both embed the validated ``repro.service.stats/1`` document.
+
 Writes the orchestrator CSV plus JSON artifacts alongside
 ``service.json``: ``benchmarks/artifacts/sharded.json`` (rows + stats +
 telemetry snapshot), ``sharded_trace.json`` (Chrome trace — load in
@@ -320,6 +329,78 @@ def run(quick: bool = True, smoke: bool = False, k: int = 2) -> Report:
         warming_helps=wm["warmed"]["first_hit_rate"]
         > wm["cold"]["first_hit_rate"],
         warmer=wm["warmed"]["warmer"])
+
+    # -- rpc: true multi-process shard serving + async admission overlap - #
+    # One worker process per (shard, replica), answers over the wire;
+    # oracle-checked bit-identical to the single-process service. The
+    # async substage submits the stream through ``submit()`` futures and
+    # records the engine's overlap ledger — execution time spent while
+    # admission was still running, the observable proof that submit()
+    # actually overlaps admission with execution.
+    rpc_shards = 2 if smoke else 4
+    rpc_replicas = 1 if smoke else 2
+    rpc_stream = stream if smoke else stream[:2000]
+    truth_rpc = [bool(a) for a in base.query_batch(rpc_stream)]
+    svc = ShardedRLCService.build(
+        g, ShardedServiceConfig(k=k, batch_size=32, max_wait_ms=2.0,
+                                cache_capacity=1024, use_device=False,
+                                num_shards=rpc_shards,
+                                num_replicas=rpc_replicas,
+                                transport="rpc"),
+        index=base.index)
+    lat = run_query_stream(svc, rpc_stream, chunk=64)
+    svc.cache.clear()
+    sync_answers = svc.query_batch(rpc_stream)
+    rpc_match = all(bool(a) == truth_rpc[i]
+                    for i, a in enumerate(sync_answers))
+    rt = hist_summary_us(svc.obs.registry, "rlc_rpc_roundtrip_seconds")
+    st = svc.stats()
+    from repro.service import validate_stats
+    validate_stats(st)
+    rpc_row = dict(
+        stage="rpc", shards=rpc_shards, replicas=rpc_replicas,
+        requests=len(rpc_stream),
+        q_p50_us=round(float(np.percentile(lat, 50)) * 1e6, 1),
+        q_p99_us=round(float(np.percentile(lat, 99)) * 1e6, 1),
+        qps=round(len(rpc_stream) / lat.sum(), 1),
+        roundtrip_p50_us=rt["p50_us"], roundtrip_p99_us=rt["p99_us"],
+        roundtrips=rt["count"],
+        digest_wire_kb=round(st["executor"]["digest_bytes"] / 1024, 1),
+        wire_sent_kb=round(st["rpc"]["wire_bytes"]["sent"] / 1024, 1),
+        wire_recv_kb=round(st["rpc"]["wire_bytes"]["received"] / 1024, 1),
+        live_workers=st["rpc"]["live_workers"],
+        answers_match=rpc_match)
+    rep.add(**rpc_row)
+
+    # async substage on the same fleet: clear the cache so every submit
+    # reaches the scheduler, then admit the whole stream non-blocking
+    svc.cache.clear()
+    async_stream = rpc_stream * (3 if smoke else 1)
+    svc.start()
+    t0 = time.perf_counter()
+    futs = [svc.submit(s, t, mr) for s, t, mr in async_stream]
+    admit_wall_s = time.perf_counter() - t0
+    svc._engine.flush()
+    vals = [f.result(timeout=300.0) for f in futs]
+    total_wall_s = time.perf_counter() - t0
+    async_match = all(bool(v) == truth_rpc[i % len(rpc_stream)]
+                      for i, v in enumerate(vals))
+    es = svc._engine.stats()
+    rpc_stats_doc = svc.stats()
+    validate_stats(rpc_stats_doc)
+    async_row = dict(
+        stage="rpc_async", shards=rpc_shards, replicas=rpc_replicas,
+        submitted=es["submitted"], completed=es["completed"],
+        exec_batches=es["exec_batches"],
+        admit_wall_s=round(admit_wall_s, 4),
+        total_wall_s=round(total_wall_s, 4),
+        admit_s=es["admit_s"], exec_s=es["exec_s"],
+        overlap_s=es["overlap_s"], answers_match=async_match)
+    rep.add(**async_row)
+    results["rpc"] = dict(rpc_row, stats=rpc_stats_doc,
+                          workers=st["rpc"]["workers"])
+    results["rpc_async"] = dict(async_row)
+    svc.close()
 
     os.makedirs(ART, exist_ok=True)
     with open(os.path.join(ART, "sharded_trace.json"), "w") as f:

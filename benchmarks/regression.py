@@ -53,6 +53,12 @@ METRICS: List[Tuple[str, Tuple[str, ...], str]] = [
     ("sharded.json", ("results", "slo", "p99_over_p50"), "lower"),
     ("sharded.json", ("results", "overload", "shed_ratio"), "higher"),
     ("sharded.json", ("results", "warming", "warm_hit_rate"), "higher"),
+    # multi-process rpc transport: end-to-end throughput over the wire,
+    # per-call round-trip tail, and the digest bytes a stream ships
+    # (bytes regressing means the digest hand-off got chattier)
+    ("sharded.json", ("results", "rpc", "qps"), "higher"),
+    ("sharded.json", ("results", "rpc", "roundtrip_p99_us"), "lower"),
+    ("sharded.json", ("results", "rpc", "digest_wire_kb"), "lower"),
     ("indexing.json", ("aggregate_s", "numpy"), "lower"),
     ("indexing.json", ("numpy_aggregate_speedup",), "higher"),
     ("indexing.json", ("parallel_speedup",), "higher"),

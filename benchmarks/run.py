@@ -165,6 +165,58 @@ def validate_telemetry_artifacts(ran):
                 f"warming hurt the post-swap hit rate: warmed "
                 f"{wm['warm_hit_rate']} < cold {wm['cold_hit_rate']}")
 
+    def rpc_stage_ok(path):
+        """The multi-process RPC stages must have run, answered
+        bit-identically to the single-process oracle, actually moved
+        digest bytes over the wire, demonstrated admission/execution
+        overlap, and embedded a valid ``repro.service.stats/1`` doc."""
+        from repro.service import validate_stats
+        with open(path) as f:
+            doc = json.load(f)
+        res = doc.get("results", {})
+        for key in ("rpc", "rpc_async"):
+            if key not in res:
+                raise ValueError(f"no {key!r} stage in {path}")
+        rpc = res["rpc"]
+        if not rpc["answers_match"]:
+            raise ValueError("rpc answers diverged from the "
+                             "single-process oracle")
+        if rpc["shards"] > 1 and rpc["digest_wire_kb"] <= 0:
+            raise ValueError("multi-shard rpc run shipped no digest "
+                             "bytes over the wire")
+        if rpc["roundtrips"] <= 0:
+            raise ValueError("no rpc round-trips recorded")
+        stats = rpc.get("stats")
+        validate_stats(stats)
+        if stats.get("transport") != "rpc":
+            raise ValueError(
+                f"expected transport 'rpc' in embedded stats, "
+                f"got {stats.get('transport')!r}")
+        a = res["rpc_async"]
+        if not a["answers_match"]:
+            raise ValueError("async rpc answers diverged from the "
+                             "single-process oracle")
+        if not a["overlap_s"] > 0:
+            raise ValueError(
+                f"submit() showed no admission/execution overlap "
+                f"(overlap_s={a['overlap_s']!r})")
+
+    def stats_schema_ok(path):
+        """Every service stats document a suite embedded must validate
+        against the versioned ``repro.service.stats/1`` schema."""
+        from repro.service import validate_stats
+        with open(path) as f:
+            doc = json.load(f)
+        found = 0
+        for res in doc.get("results", {}).values():
+            if isinstance(res, dict) and isinstance(res.get("stats"),
+                                                    dict) \
+                    and "schema" in res["stats"]:
+                validate_stats(res["stats"])
+                found += 1
+        if not found:
+            raise ValueError(f"no versioned stats documents in {path}")
+
     def parallel_speedup_ok(path):
         with open(path) as f:
             doc = json.load(f)
@@ -222,6 +274,10 @@ def validate_telemetry_artifacts(ran):
         check("sharded:audit", lambda: audits_and_shadow_of(
             "sharded", os.path.join(ART, "sharded.json")))
         check("sharded:control", lambda: control_stages_ok(
+            os.path.join(ART, "sharded.json")))
+        check("sharded:rpc", lambda: rpc_stage_ok(
+            os.path.join(ART, "sharded.json")))
+        check("sharded:stats_schema", lambda: stats_schema_ok(
             os.path.join(ART, "sharded.json")))
     if audits:
         with open(os.path.join(ART, "audit.json"), "w") as f:

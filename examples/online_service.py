@@ -63,7 +63,7 @@ def main():
     # verify against the oracle
     wrong = sum(1 for (s, t, L), a in zip(stream, answers)
                 if a != bibfs_rlc(g, s, t, L))
-    n_true = sum(answers)
+    n_true = sum(bool(a) for a in answers)
     print(f"answers: {n_true} true / {len(answers) - n_true} false, "
           f"{wrong} oracle mismatches")
     assert wrong == 0

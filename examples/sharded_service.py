@@ -52,7 +52,8 @@ def main():
         answers.extend(svc.query_batch(stream[i:i + 50]))
     wrong = sum(1 for (s, t, L), a in zip(stream, answers)
                 if a != bibfs_rlc(g, s, t, L))
-    print(f"answers: {sum(answers)} true / {len(answers) - sum(answers)} "
+    n_true = sum(bool(a) for a in answers)
+    print(f"answers: {n_true} true / {len(answers) - n_true} "
           f"false, {wrong} oracle mismatches")
     assert wrong == 0
 

@@ -15,27 +15,44 @@ synchronous query service:
 * :mod:`repro.service.control` — the closed-loop control plane:
   SLO-aware per-MR-length batching, admission control with explicit
   ``SHED`` answers, and frequency-sketch-prioritized cache warming;
+* :mod:`repro.service.answer` — the typed :class:`Answer` result (value
+  + disposition + backend attribution) and the :data:`SHED` sentinel;
+* :mod:`repro.service.lifecycle` — async admission: ``submit()``
+  futures behind the unified ``start()``/``close()`` protocol;
+* :mod:`repro.service.stats` — the versioned ``repro.service.stats/1``
+  stats schema shared by both facades, with :func:`validate_stats`;
 * :mod:`repro.service.service` — the :class:`RLCService` facade wiring
   build -> freeze -> device transfer -> serve;
 * :mod:`repro.service.sharded` — sharded multi-host serving: shard
   planner, two-sided router, replica sets with hot-swap, scatter/gather
-  fan-out behind the drop-in :class:`ShardedRLCService` facade.
+  fan-out behind the drop-in :class:`ShardedRLCService` facade;
+* :mod:`repro.service.rpc` — true multi-process serving: shard-host
+  worker processes behind a message-based RPC transport
+  (``ShardedServiceConfig(transport="rpc")``).
+
+See ``src/repro/service/README.md`` for the API reference and the
+bool->:class:`Answer` / sync->``submit()`` migration notes.
 """
+from .answer import DISPOSITIONS, SHED, Answer
 from .cache import CacheStats, ResultCache
-from .control import (SHED, AdmissionController, CacheWarmer, ControlPlane,
+from .control import (AdmissionController, CacheWarmer, ControlPlane,
                       FrequencySketch, SLOBatchController, VirtualClock)
 from .executor import BACKENDS, BatchExecutor, ExecutorError
 from .expr import ExpressionError, PathExpression, parse_expression
+from .lifecycle import AsyncEngine
 from .metrics import LatencyRecorder
 from .scheduler import Batch, MicroBatcher, Request
 from .service import RLCService, ServiceConfig
 from .sharded import ShardedRLCService, ShardedServiceConfig
+from .stats import STATS_SCHEMA, validate_stats
 
 __all__ = [
-    "BACKENDS", "AdmissionController", "Batch", "BatchExecutor",
-    "CacheStats", "CacheWarmer", "ControlPlane", "ExecutorError",
-    "ExpressionError", "FrequencySketch", "LatencyRecorder", "MicroBatcher",
-    "PathExpression", "RLCService", "Request", "ResultCache", "SHED",
-    "SLOBatchController", "ServiceConfig", "ShardedRLCService",
+    "Answer", "BACKENDS", "AdmissionController", "AsyncEngine", "Batch",
+    "BatchExecutor", "CacheStats", "CacheWarmer", "ControlPlane",
+    "DISPOSITIONS", "ExecutorError", "ExpressionError", "FrequencySketch",
+    "LatencyRecorder", "MicroBatcher", "PathExpression", "RLCService",
+    "Request", "ResultCache", "SHED", "SLOBatchController",
+    "STATS_SCHEMA", "ServiceConfig", "ShardedRLCService",
     "ShardedServiceConfig", "VirtualClock", "parse_expression",
+    "validate_stats",
 ]

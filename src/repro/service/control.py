@@ -59,31 +59,14 @@ import numpy as np
 
 from repro.obs import NULL_OBS
 
+from .answer import SHED  # noqa: F401 — historical home, re-exported
+
 Key = Tuple[int, int, int]  # (s, t, mr_id)
 
 __all__ = [
     "SHED", "VirtualClock", "FrequencySketch", "SLOBatchController",
     "AdmissionController", "CacheWarmer", "ControlPlane",
 ]
-
-
-class _Shed:
-    """Singleton explicit shed answer. Deliberately not truthy/falsy:
-    a shed query has *no* reachability answer, and any code path that
-    tries to coerce one into a boolean is a bug that must fail loud."""
-
-    __slots__ = ()
-
-    def __repr__(self) -> str:
-        return "SHED"
-
-    def __bool__(self) -> bool:
-        raise TypeError(
-            "SHED is not a boolean answer; check `ans is SHED` before "
-            "interpreting query results under admission control")
-
-
-SHED = _Shed()
 
 
 class VirtualClock:

@@ -1,0 +1,44 @@
+"""Multi-process shard serving: the RPC plane under ``transport="rpc"``.
+
+This package is the process boundary the in-process sharded service
+only simulated (ROADMAP item 1): a controller talks to one shard-host
+*worker process* per (shard, replica) over length-prefixed
+msgpack-or-JSON frames, each worker holding only its shard's
+:meth:`FrozenRLCIndex.slice_rows` view plus a locally reconstructed
+dict-index slice — never the global python fallback — and cross-shard
+queries ship out-row digests over the wire instead of ``device_put``.
+
+Layers, bottom up:
+
+* :mod:`~repro.service.rpc.wire` — self-describing byte frames
+  (msgpack preferred, JSON fallback; numpy arrays as dtype+shape+raw
+  bytes).
+* :mod:`~repro.service.rpc.transport` — framed request/response
+  endpoints over :mod:`multiprocessing.connection` (HMAC-authed
+  loopback sockets), :class:`WorkerGone` / :class:`RemoteError`
+  taxonomy.
+* :mod:`~repro.service.rpc.worker` — the jax-free shard-host process:
+  ``execute`` / ``gather_digest`` / ``join_digest`` / ``swap``
+  handlers over shard-local state.
+* :mod:`~repro.service.rpc.controller` — :class:`RpcShardCluster`:
+  elastic membership (join/leave/rejoin with epochs), round-robin
+  replica routing with died-mid-call retry, per-worker fenced rolling
+  swaps, and the ``rlc_rpc_*`` metric family.
+
+``ShardedRLCService(cfg, transport="rpc")`` wires a cluster under the
+normal fan-out; answers stay bit-identical to the in-process path.
+"""
+from __future__ import annotations
+
+from .controller import RpcShardCluster, RpcWorkerHandle, WorkerLost
+from .transport import (RemoteError, RpcEndpoint, RpcError, RpcListener,
+                        WorkerGone, connect)
+from .wire import codec_name, decode, encode
+from .worker import ShardWorker, worker_main
+
+__all__ = [
+    "RpcShardCluster", "RpcWorkerHandle", "WorkerLost",
+    "RpcEndpoint", "RpcListener", "RpcError", "RemoteError",
+    "WorkerGone", "connect", "codec_name", "decode", "encode",
+    "ShardWorker", "worker_main",
+]

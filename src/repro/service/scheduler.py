@@ -271,7 +271,9 @@ class MicroBatcher:
 
     # -- background deadline ticker ------------------------------------- #
     def start_ticker(self, on_batch: Callable[[Batch], None],
-                     interval_s: Optional[float] = None) -> None:
+                     interval_s: Optional[float] = None,
+                     on_error: Optional[
+                         Callable[[BaseException], None]] = None) -> None:
         """Start a daemon thread that fires deadline flushes on its own.
 
         Without a ticker, ``max_wait_s`` is only honored when some caller
@@ -279,6 +281,12 @@ class MicroBatcher:
         most ~``interval_s`` after its deadline even if no admission ever
         arrives again. ``on_batch`` runs on the ticker thread for every
         flushed batch (execute + backfill caches there). Off by default.
+
+        ``on_error`` (optional) is invoked with the exception when
+        ``on_batch`` raises — async callers use it to fail pending
+        futures instead of silently counting the error; without it (or
+        if it raises itself) the failure just lands in
+        ``ticker_errors``. The ticker survives either way.
         """
         if interval_s is None:
             interval_s = max(self.max_wait_s / 4.0, 1e-4)
@@ -288,10 +296,15 @@ class MicroBatcher:
                 for batch in self.poll():
                     try:
                         on_batch(batch)
-                    except Exception:
+                    except Exception as exc:
                         # a failing callback must not kill the ticker —
                         # later deadline flushes still have to fire
                         self.ticker_errors += 1
+                        if on_error is not None:
+                            try:
+                                on_error(exc)
+                            except Exception:
+                                self.ticker_errors += 1
 
         with self._lock:
             if self._ticker is not None:

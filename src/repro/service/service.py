@@ -28,17 +28,15 @@ from repro.core.minimum_repeat import LabelSeq, mr_id_space
 from repro.core.rlc_index import RLCIndex
 from repro.obs import Observability
 
+from .answer import SHED, Answer
 from .cache import ResultCache
-from .control import SHED, ControlPlane
+from .control import ControlPlane
 from .executor import BatchExecutor
 from .expr import PathExpression, canonicalize, parse_expression
 from .scheduler import Batch, MicroBatcher, Request
 
 Constraint = Union[str, Sequence[int], PathExpression]
 Query = Tuple[int, int, Constraint]
-#: a query_batch answer: a boolean, or the SHED sentinel when admission
-#: control dropped the query (check ``ans is SHED`` — SHED refuses bool())
-Answer = Union[bool, object]
 
 
 @dataclass
@@ -141,6 +139,7 @@ class RLCService:
         self.queries_shed = 0
         self.deltas_applied = 0
         self._delta = None          # lazy DeltaBuilder (apply_delta)
+        self._engine = None         # lazy AsyncEngine (start()/submit())
         self._closed = False
         self._last_audit = None     # most recent audit_report() document
         self._m_explain = self.obs.registry.counter(
@@ -193,13 +192,19 @@ class RLCService:
         return s, t, self.mr_ids[expr.mr], len(expr.mr)
 
     # -- serving -------------------------------------------------------- #
-    def query(self, s: int, t: int, constraint: Constraint) -> bool:
-        """Synchronous single query (cache -> batch-of-one on miss)."""
+    def query(self, s: int, t: int, constraint: Constraint) -> Answer:
+        """Synchronous single query (cache -> batch-of-one on miss).
+        Returns a typed :class:`Answer` — truthy/comparable exactly like
+        the bool it wraps, plus disposition + backend attribution."""
         return self.query_batch([(s, t, constraint)])[0]
 
     def query_batch(self, queries: Sequence[Query],
                     now: Optional[float] = None) -> List[Answer]:
         """Answer ``queries`` in order through cache + scheduler + executor.
+
+        Each answer is a typed :class:`Answer` (value + disposition +
+        backend attribution); ``bool(ans)`` / ``ans == True`` behave
+        like the bare boolean this method used to return.
 
         ``now``: optional admission timestamp (for replaying a timed
         arrival trace); defaults to the scheduler's clock per admission.
@@ -207,11 +212,21 @@ class RLCService:
         With admission control on (``admission_max_pending`` /
         ``admission_backpressure_ms``), a dropped query's answer is the
         :data:`SHED` sentinel — never a fabricated boolean; check
-        ``ans is SHED`` (SHED raises on ``bool()``). Eviction of queued
-        victims assumes the synchronous single-caller contract this
-        method already requires (see the lost-answer guard below): a
-        victim admitted by a concurrent call would trip that guard there.
+        ``ans is SHED`` or ``ans.shed`` (SHED raises on ``bool()``).
+        Eviction of queued victims assumes the synchronous single-caller
+        contract this method already requires (see the lost-answer guard
+        below): a victim admitted by a concurrent call would trip that
+        guard there.
+
+        When the async engine is running (:meth:`start`), the scheduler
+        is ticker-driven and shared with :meth:`submit` callers, so this
+        method bridges through the engine instead of draining the
+        batcher itself — same answers, no lost-flush race.
         """
+        if self._engine is not None and self._engine.active:
+            futures = [self.submit(s, t, c) for (s, t, c) in queries]
+            self._engine.flush()
+            return [f.result(timeout=60.0) for f in futures]
         answers: List[Optional[Answer]] = [None] * len(queries)
         # canonical (s, t, mr_id) per position, kept only when the shadow
         # verifier wants to sample answered queries afterwards
@@ -239,7 +254,7 @@ class RLCService:
                        cat="admission", mr_len=mr_len,
                        cache="hit" if hit is not None else "miss")
             if hit is not None:
-                answers[i] = hit
+                answers[i] = Answer(hit, "cache_hit")
                 continue
             if admission is not None:
                 decision, victim = admission.decide(
@@ -266,20 +281,22 @@ class RLCService:
                 "share a ticker-driven or concurrent MicroBatcher with "
                 "synchronous query_batch")
         self.queries_served += len(queries)
-        out: List[Answer] = [a if a is SHED else bool(a) for a in answers]
-        self.queries_shed += sum(1 for a in out if a is SHED)
+        out: List[Answer] = answers
+        self.queries_shed += sum(1 for a in out if a.shed)
         if keys is not None:
             for (s, t, mr_id), ans in zip(keys, out):
-                if ans is not SHED:     # no answer to verify
-                    self._shadow.offer(s, t, mr_id, ans)
+                if not ans.shed:        # no answer to verify
+                    self._shadow.offer(s, t, mr_id, ans.value)
         return out
 
     def _run_batch(self, batch: Batch, tr=None):
-        """Produce one answer per real request (overridden by the sharded
-        service, which fans the batch out across shards instead)."""
-        ans, _backend = self.executor.execute(
+        """Produce one answer per real request, plus per-request backend
+        attribution: ``(values, backends)`` where ``backends`` is one
+        label per request. Overridden by the sharded service, which fans
+        the batch out across shards instead."""
+        ans, backend = self.executor.execute(
             batch.s, batch.t, batch.mr_id, batch.n_real, trace=tr)
-        return ans
+        return ans, [backend] * len(batch.requests)
 
     def _warm_execute(self, s: np.ndarray, t: np.ndarray,
                       mr_id: np.ndarray, mr_len: int) -> np.ndarray:
@@ -292,7 +309,8 @@ class RLCService:
         batch = Batch(reqs, np.asarray(s, np.int32),
                       np.asarray(t, np.int32),
                       np.asarray(mr_id, np.int32), int(mr_len), "warm")
-        return np.asarray(self._run_batch(batch), dtype=bool)
+        vals, _backends = self._run_batch(batch)
+        return np.asarray(vals, dtype=bool)
 
     def _execute(self, batch: Batch, answers: List[Optional[Answer]],
                  slot: Dict[int, List[int]], tr=None) -> None:
@@ -307,9 +325,9 @@ class RLCService:
                               mr_len=batch.mr_len, n=batch.n_real)
             with tr.span("execute", cat="service",
                          n=batch.n_real, mr_len=batch.mr_len):
-                vals = self._run_batch(batch, tr)
+                vals, backends = self._run_batch(batch, tr)
         else:
-            vals = self._run_batch(batch)
+            vals, backends = self._run_batch(batch)
         exec_s = time.perf_counter() - t0
         # feed the control loops (SLO EWMAs, back-pressure queue waits);
         # a VirtualClock scheduler clock also advances by the measured
@@ -318,12 +336,15 @@ class RLCService:
         advance = getattr(self.batcher.clock, "advance", None)
         if advance is not None:
             advance(exec_s)
-        for req, val in zip(batch.requests, vals):
+        for req, val, backend in zip(batch.requests, vals, backends):
             val = bool(val)
             self.cache.put((req.s, req.t, req.mr_id), val,
                            mr_len=batch.mr_len)
+            ans = Answer(val,
+                         "degraded" if backend == "bibfs" else "computed",
+                         backend)
             for pos in slot.get(req.req_id, ()):
-                answers[pos] = val
+                answers[pos] = ans
 
     # -- EXPLAIN / provenance -------------------------------------------- #
     def explain(self, s: int, t: int, constraint: Constraint,
@@ -481,14 +502,44 @@ class RLCService:
                     deltas_applied=self.deltas_applied,
                     warm=warm)
 
-    # -- shutdown --------------------------------------------------------- #
+    # -- lifecycle -------------------------------------------------------- #
+    def start(self, tick_interval_s: float = 0.002) -> "RLCService":
+        """Bring up async admission: after ``start()``, :meth:`submit`
+        returns immediately with a future and batches execute on a
+        background thread (deadline-ticker driven). Idempotent; returns
+        ``self`` so ``with svc.start():`` reads naturally. Synchronous
+        :meth:`query` / :meth:`query_batch` keep working (they bridge
+        through the engine). The sharded service shares this exact
+        protocol — one lifecycle across both facades."""
+        if self._closed:
+            raise RuntimeError("service is closed")
+        if self._engine is None:
+            from .lifecycle import AsyncEngine
+            self._engine = AsyncEngine(self, tick_interval_s)
+        self._engine.start()
+        return self
+
+    def submit(self, s: int, t: int, constraint: Constraint,
+               now: Optional[float] = None):
+        """Non-blocking query: admission happens now, execution happens
+        on the engine thread; returns a
+        :class:`concurrent.futures.Future` resolving to an
+        :class:`Answer` (or :data:`SHED` under admission control).
+        Starts the engine on first use."""
+        if self._engine is None or not self._engine.active:
+            self.start()
+        return self._engine.submit(s, t, constraint, now)
+
     def close(self) -> None:
-        """Idempotent shutdown: stop (and join) the background deadline
-        ticker if one was started. Safe to call any number of times; the
+        """Idempotent shutdown: drain + stop the async engine (resolving
+        every in-flight future), stop the background deadline ticker and
+        the shadow verifier. Safe to call any number of times; the
         service can keep answering synchronous queries afterwards."""
         if self._closed:
             return
         self._closed = True
+        if self._engine is not None:
+            self._engine.close()
         self.batcher.stop_ticker()
         if self._shadow is not None:
             self._shadow.stop()
@@ -499,6 +550,28 @@ class RLCService:
     def __exit__(self, exc_type, exc, tb) -> bool:
         self.close()
         return False
+
+    # -- deprecated lifecycle entry points -------------------------------- #
+    def start_ticker(self, on_batch=None,
+                     interval_s: Optional[float] = None) -> None:
+        """Deprecated: use :meth:`start`. Kept as a shim for callers
+        that drove the scheduler ticker through the service; ignores
+        ``on_batch`` and brings up the unified async engine instead."""
+        import warnings
+        warnings.warn(
+            "RLCService.start_ticker() is deprecated; use start() — "
+            "the unified lifecycle runs the ticker and an execution "
+            "thread for you", DeprecationWarning, stacklevel=2)
+        self.start(tick_interval_s=interval_s
+                   if interval_s is not None else 0.002)
+
+    def stop_ticker(self) -> None:
+        """Deprecated: use :meth:`close` (or the context manager)."""
+        import warnings
+        warnings.warn(
+            "RLCService.stop_ticker() is deprecated; use close()",
+            DeprecationWarning, stacklevel=2)
+        self.close()
 
     # -- observability --------------------------------------------------- #
     def audit_report(self, sample: int = 128, seed: int = 0) -> dict:
@@ -542,31 +615,21 @@ class RLCService:
         return self.obs.prometheus()
 
     def stats(self) -> dict:
-        """Nested observability snapshot (the bench-JSON shape).
+        """Versioned observability snapshot (``repro.service.stats/1``,
+        the bench-JSON shape; see :mod:`repro.service.stats`).
 
         Every subsystem is one sub-dict — ``executor`` holds both the
-        per-backend latency summaries and the fallback count (previously
-        ``fallbacks`` sat flat at the top level while backend latencies
-        were nested, so JSON consumers had to special-case it). The cache
-        section's ``hit_rate`` is a ratio in [0, 1].
+        per-backend latency summaries and the fallback count. The cache
+        section's ``hit_rate`` is a ratio in [0, 1]. Shared sections
+        come from :func:`repro.service.stats.base_stats`; validate with
+        :func:`repro.service.stats.validate_stats`.
         """
-        return dict(
-            queries_served=self.queries_served,
-            queries_shed=self.queries_shed,
-            deltas_applied=self.deltas_applied,
-            cache=self.cache.stats.as_dict(),
+        from .stats import base_stats
+        out = base_stats(self, "single", "local")
+        out.update(
             executor=dict(
                 backends=self.executor.stats(),
                 fallbacks=self.executor.fallbacks),
-            scheduler=dict(
-                batches_full=self.batcher.batches_full,
-                batches_deadline=self.batcher.batches_deadline,
-                batches_drain=self.batcher.batches_drain,
-                coalesced=self.batcher.coalesced,
-                pending=self.batcher.pending()),
-            control=self.ctl.stats(),
-            build=(self.build_stats.as_dict()
-                   if self.build_stats is not None else None),
             index=dict(
                 entries=self.index.num_entries(),
                 size_bytes=self.index.size_bytes(),
@@ -574,8 +637,5 @@ class RLCService:
                 device=self.device_index is not None,
                 row_len=(self.device_index.row_len
                          if self.device_index else None)),
-            telemetry=dict(enabled=self.obs.enabled,
-                           tracing=self.obs.tracer.stats()),
-            shadow=(self._shadow.stats()
-                    if self._shadow is not None else None),
         )
+        return out

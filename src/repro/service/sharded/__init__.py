@@ -30,23 +30,26 @@ padded row per query — and the merge-join runs against the local in-rows.
 No query ever needs more than one inter-shard hop, and no shard ever
 needs another shard's in-side.
 
-Multi-host is simulated by in-process shard workers sharing one address
-space; when JAX exposes multiple devices, shard layouts are pinned
-round-robin across them and the digest ship becomes a real
-``device_put`` transfer. A real multi-process transport (RPC between
-hosts) is a ROADMAP follow-up — the planner/router/fan-out contracts are
-transport-agnostic.
+Two transports serve the same contracts. ``transport="inproc"``
+(default) simulates multi-host with in-process shard workers sharing
+one address space; when JAX exposes multiple devices, shard layouts are
+pinned round-robin across them and the digest ship becomes a real
+``device_put`` transfer. ``transport="rpc"`` is the real thing: one
+shard-host *worker process* per (shard, replica), each holding only its
+shard's slice, driven over the message-based RPC plane in
+:mod:`repro.service.rpc` — the digest hand-off serializes out-rows over
+the wire, and answers stay bit-identical to the in-process path.
 """
-from .fanout import ScatterGatherExecutor
+from .fanout import RpcScatterGatherExecutor, ScatterGatherExecutor
 from .plan import ShardPlan, plan_shards
 from .replica import (ShardReplica, ShardReplicaSet, build_device_layout,
-                      build_replica)
+                      build_replica, dict_index_slice)
 from .router import Route, TwoSidedRouter
 from .service import ShardedRLCService, ShardedServiceConfig
 
 __all__ = [
-    "Route", "ScatterGatherExecutor", "ShardPlan", "ShardReplica",
-    "ShardReplicaSet", "ShardedRLCService", "ShardedServiceConfig",
-    "TwoSidedRouter", "build_device_layout", "build_replica",
-    "plan_shards",
+    "Route", "RpcScatterGatherExecutor", "ScatterGatherExecutor",
+    "ShardPlan", "ShardReplica", "ShardReplicaSet", "ShardedRLCService",
+    "ShardedServiceConfig", "TwoSidedRouter", "build_device_layout",
+    "build_replica", "dict_index_slice", "plan_shards",
 ]

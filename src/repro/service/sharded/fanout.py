@@ -107,11 +107,36 @@ class ScatterGatherExecutor:
         self._m_degraded.inc()
         return out
 
+    # -- transport hooks (overridden by the RPC executor) --------------- #
+    def _swapping(self, shard_id: int) -> bool:
+        """True when ``shard_id`` cannot take a sub-batch right now (its
+        replica set is mid-swap) and the degrade path should answer."""
+        return self.shards[shard_id].swapping
+
+    def _run_sub(self, ss: int, st: int, s: np.ndarray, t: np.ndarray,
+                 mr: np.ndarray, n_real: int,
+                 trace=None) -> Tuple[np.ndarray, str]:
+        """Execute one padded ``(shard_s, shard_t)`` sub-batch; returns
+        ``(answers[:n_real], backend_label)``. The in-process transport
+        acquires replicas directly; :class:`RpcScatterGatherExecutor`
+        sends the same sub-batch to worker processes."""
+        if ss == st:
+            rep = self.shards[st].acquire()
+            ans, backend = rep.executor.execute(s, t, mr, n_real=n_real,
+                                                trace=trace)
+            return np.asarray(ans[:n_real], dtype=bool), backend
+        ans = self._cross_shard(ss, st, s, t, mr, n_real, trace=trace)
+        return np.asarray(ans[:n_real], dtype=bool), "digest"
+
     # ------------------------------------------------------------------ #
-    def execute(self, batch: Batch, trace=None) -> np.ndarray:
+    def execute(self, batch: Batch,
+                trace=None) -> Tuple[np.ndarray, List[str]]:
         """Answer every real request of ``batch``, in admission order.
-        ``trace``: optional sampled :class:`repro.obs.Trace` — the shard
-        route, each sub-batch, and the digest hand-off get spans."""
+        Returns ``(answers, backends)``: the bool answers plus one
+        backend-attribution label per request (same order) for the typed
+        :class:`~repro.service.answer.Answer` results. ``trace``:
+        optional sampled :class:`repro.obs.Trace` — the shard route,
+        each sub-batch, and the digest hand-off get spans."""
         reqs = batch.requests
         t_route = time.perf_counter()
         groups: Dict[Tuple[int, int], List[int]] = {}
@@ -123,11 +148,12 @@ class ScatterGatherExecutor:
             trace.add("route", trace.tracer._now() - dt, dt, cat="fanout",
                       n=len(reqs), sub_batches=len(groups))
         answers = np.zeros(len(reqs), dtype=bool)
+        backends: List[str] = [""] * len(reqs)
         for (ss, st), idxs in sorted(groups.items()):
             self.sub_batches[(ss, st)] = self.sub_batches.get((ss, st), 0) + 1
-            if (self.graph is not None and self.id_to_mr is not None
-                    and (self.shards[ss].swapping
-                         or self.shards[st].swapping)):
+            can_degrade = (self.graph is not None
+                           and self.id_to_mr is not None)
+            if can_degrade and (self._swapping(ss) or self._swapping(st)):
                 t0 = time.perf_counter()
                 ans = self._degrade_bibfs(reqs, idxs)
                 dt = time.perf_counter() - t0
@@ -137,32 +163,34 @@ class ScatterGatherExecutor:
                               trace.tracer._now() - dt, dt, cat="fanout",
                               n=len(idxs), path="degraded")
                 answers[np.asarray(idxs)] = ans
+                for q in idxs:
+                    backends[q] = "bibfs"
                 continue
             s = _pad_pow2([reqs[q].s for q in idxs], self.batch_size)
             t = _pad_pow2([reqs[q].t for q in idxs], self.batch_size)
             mr = _pad_pow2([reqs[q].mr_id for q in idxs], self.batch_size)
             t0 = time.perf_counter()
-            if ss == st:
-                rep = self.shards[st].acquire()
-                ans, _backend = rep.executor.execute(s, t, mr,
-                                                     n_real=len(idxs),
-                                                     trace=trace)
-                dt = time.perf_counter() - t0
-                self.recorders["local"].record(dt, len(idxs))
-                self._m_sub["local"].observe(dt)
-            else:
-                ans = self._cross_shard(ss, st, s, t, mr, len(idxs),
-                                        trace=trace)
-                dt = time.perf_counter() - t0
-                self.recorders["remote"].record(dt, len(idxs))
-                self._m_sub["remote"].observe(dt)
+            try:
+                ans, backend = self._run_sub(ss, st, s, t, mr, len(idxs),
+                                             trace=trace)
+            except Exception:
+                # transport failure (e.g. every worker of a shard died
+                # mid-call): the degrade path still answers exactly
+                if not can_degrade:
+                    raise
+                ans, backend = self._degrade_bibfs(reqs, idxs), "bibfs"
+            path = "local" if ss == st else "remote"
+            dt = time.perf_counter() - t0
+            self.recorders[path].record(dt, len(idxs))
+            self._m_sub[path].observe(dt)
             if trace is not None:
                 trace.add(f"sub[{ss}->{st}]", trace.tracer._now() - dt, dt,
-                          cat="fanout", n=len(idxs),
-                          path="local" if ss == st else "remote")
+                          cat="fanout", n=len(idxs), path=path)
             answers[np.asarray(idxs)] = np.asarray(ans[:len(idxs)],
                                                    dtype=bool)
-        return answers
+            for q in idxs:
+                backends[q] = backend
+        return answers, backends
 
     # ------------------------------------------------------------------ #
     def _cross_shard(self, ss: int, st: int, s: np.ndarray, t: np.ndarray,
@@ -238,3 +266,61 @@ class ScatterGatherExecutor:
             degraded=self.degraded,
             digest_bytes=self.digest_bytes,
         )
+
+
+class RpcScatterGatherExecutor(ScatterGatherExecutor):
+    """The same scatter/gather, but every sub-batch crosses a process
+    boundary: same-shard work goes to a shard-host worker over RPC
+    (``transport="rpc"``), and the cross-shard digest hand-off gathers
+    out-row digests from shard *i*'s worker and ships the *bytes* to
+    shard *j*'s worker for the merge join — the wire replacing
+    ``jax.device_put``.
+
+    Inherits routing, padding, accounting, tracing, and the BiBFS
+    degrade path; only the three transport hooks differ. A shard is
+    "swapping" here when no live, unfenced worker can serve it (the
+    cluster fences workers one at a time during a rolling swap, so with
+    replicas > 1 this almost never degrades). A :class:`WorkerLost`
+    escaping a sub-batch is caught by the base class and answered by
+    BiBFS — exact answers survive total shard loss.
+    """
+
+    def __init__(self, cluster, router: TwoSidedRouter, batch_size: int,
+                 obs=None, graph=None, id_to_mr=None):
+        # the base class wants replica sets; the cluster stands in for
+        # them — shards=[] keeps every inherited in-process path unused
+        super().__init__([], router, batch_size, obs=obs, graph=graph,
+                         id_to_mr=id_to_mr)
+        self.cluster = cluster
+        self.remote_joins_rpc = 0
+
+    def _swapping(self, shard_id: int) -> bool:
+        return self.cluster.swapping(shard_id)
+
+    def _run_sub(self, ss: int, st: int, s: np.ndarray, t: np.ndarray,
+                 mr: np.ndarray, n_real: int,
+                 trace=None) -> Tuple[np.ndarray, str]:
+        if ss == st:
+            ans, backend = self.cluster.execute(st, s, t, mr, n_real)
+            return np.asarray(ans[:n_real], dtype=bool), f"rpc:{backend}"
+        # scatter: shard ss's worker gathers out-row digests ...
+        digest = self.cluster.gather_digest(ss, s[:n_real])
+        nbytes = int(digest["hub"].nbytes + digest["mr"].nbytes)
+        # ... which cross the wire (real bytes, not simulated) ...
+        self.digest_bytes += nbytes
+        self._m_digest.inc(nbytes)
+        if trace is not None:
+            trace.add(f"digest[{ss}->{st}]", trace.tracer._now(), 0.0,
+                      cat="fanout", bytes=nbytes)
+        # ... and shard st's worker merge-joins them against its in-rows
+        ans = self.cluster.join_digest(st, s[:n_real], t[:n_real],
+                                       mr[:n_real], digest)
+        self.remote_joins_rpc += 1
+        self._m_join["numpy"].inc()
+        return np.asarray(ans[:n_real], dtype=bool), "rpc:digest"
+
+    def stats(self) -> dict:
+        st = super().stats()
+        st["remote_joins_rpc"] = self.remote_joins_rpc
+        st["rpc"] = self.cluster.stats()
+        return st

@@ -22,10 +22,43 @@ import itertools
 import threading
 from typing import List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.minimum_repeat import LabelSeq
 from repro.core.rlc_index import FrozenRLCIndex, RLCIndex
 
 from ..executor import BatchExecutor
+
+
+def dict_index_slice(frozen_slice: FrozenRLCIndex, lo: int, hi: int,
+                     id_to_mr: Sequence[LabelSeq]) -> RLCIndex:
+    """Shard-local dict-layout index reconstructed from a frozen slice.
+
+    The python-fallback twin of :meth:`FrozenRLCIndex.slice_rows`: entry
+    dicts populated only for rows ``[lo, hi)``, global vertex ids and
+    ``aid`` kept. This is what a shard-host *worker process* serves its
+    python path from — a host never materializes the global dict index
+    (:mod:`repro.service.rpc.worker`); the routing invariant guarantees
+    every locally executed query has both endpoints in range.
+    """
+    n = frozen_slice.num_vertices
+    l_out: List[dict] = [dict() for _ in range(n)]
+    l_in: List[dict] = [dict() for _ in range(n)]
+
+    def fill(maps, indptr, hub, mr):
+        for v in range(lo, hi):
+            a, b = int(indptr[v]), int(indptr[v + 1])
+            d = maps[v]
+            for h, m in zip(hub[a:b], mr[a:b]):
+                d.setdefault(int(h), set()).add(tuple(id_to_mr[int(m)]))
+
+    fill(l_out, frozen_slice.out_indptr, frozen_slice.out_hub,
+         frozen_slice.out_mr)
+    fill(l_in, frozen_slice.in_indptr, frozen_slice.in_hub,
+         frozen_slice.in_mr)
+    return RLCIndex(n, frozen_slice.k,
+                    np.asarray(frozen_slice.aid, dtype=np.int64),
+                    l_in=l_in, l_out=l_out)
 
 
 @dataclasses.dataclass

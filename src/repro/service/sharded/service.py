@@ -43,6 +43,15 @@ from .router import TwoSidedRouter
 class ShardedServiceConfig(ServiceConfig):
     num_shards: int = 2
     num_replicas: int = 1
+    #: "inproc" — shard replicas live in this process (the simulated
+    #: multi-host of ISSUE-3); "rpc" — one shard-host *worker process*
+    #: per (shard, replica), each holding only its shard slice, driven
+    #: over the message-based RPC transport (:mod:`repro.service.rpc`)
+    transport: str = "inproc"
+    #: per-request RPC timeout (rpc transport only)
+    rpc_call_timeout_s: float = 120.0
+    #: worker fleet boot timeout (rpc transport only)
+    rpc_start_timeout_s: float = 60.0
 
 
 def _shard_devices(num_shards: int) -> List[Optional[object]]:
@@ -77,27 +86,50 @@ class ShardedRLCService:
         self.frozen = index.freeze(self.mr_ids)
         self.plan: ShardPlan = plan_shards(self.frozen, config.num_shards)
         self.generation = 0
-        devices = _shard_devices(config.num_shards)
+        if config.transport not in ("inproc", "rpc"):
+            raise ValueError(
+                f"transport must be 'inproc' or 'rpc', "
+                f"got {config.transport!r}")
+        self.cluster = None         # RpcShardCluster under transport="rpc"
         self.shards: List[ShardReplicaSet] = []
-        for sid in range(config.num_shards):
-            lo, hi = self.plan.range(sid)
-            sl = self.frozen.slice_rows(lo, hi)
-            layout = (build_device_layout(sl, self.mr_ids, rows=(lo, hi),
-                                          device=devices[sid])
-                      if config.use_device else None)
-            replicas = [
-                build_replica(sid, rid, self.generation, sl, self.mr_ids,
-                              index, self._id_to_mr, backend=config.backend,
-                              use_device=config.use_device,
-                              device=devices[sid], rows=(lo, hi),
-                              shared_device_index=layout, obs=self.obs)
-                for rid in range(config.num_replicas)]
-            self.shards.append(
-                ShardReplicaSet(sid, lo, hi, replicas, obs=self.obs))
         self.router = TwoSidedRouter(self.plan, obs=self.obs)
-        self.fanout = ScatterGatherExecutor(
-            self.shards, self.router, config.batch_size, obs=self.obs,
-            graph=graph, id_to_mr=self._id_to_mr)
+        if config.transport == "rpc":
+            # true multi-process serving: one shard-host worker process
+            # per (shard, replica); this process keeps only the global
+            # frozen (for EXPLAIN/audit/rebuilds) — serving state lives
+            # in the workers, each holding its slice alone
+            from ..rpc import RpcShardCluster
+            from .fanout import RpcScatterGatherExecutor
+            self.cluster = RpcShardCluster(
+                self.plan.ranges(), config.num_replicas, self._id_to_mr,
+                obs=self.obs, start_timeout_s=config.rpc_start_timeout_s,
+                call_timeout_s=config.rpc_call_timeout_s)
+            self.cluster.start(self.frozen, generation=self.generation)
+            self.fanout = RpcScatterGatherExecutor(
+                self.cluster, self.router, config.batch_size,
+                obs=self.obs, graph=graph, id_to_mr=self._id_to_mr)
+        else:
+            devices = _shard_devices(config.num_shards)
+            for sid in range(config.num_shards):
+                lo, hi = self.plan.range(sid)
+                sl = self.frozen.slice_rows(lo, hi)
+                layout = (build_device_layout(sl, self.mr_ids,
+                                              rows=(lo, hi),
+                                              device=devices[sid])
+                          if config.use_device else None)
+                replicas = [
+                    build_replica(sid, rid, self.generation, sl,
+                                  self.mr_ids, index, self._id_to_mr,
+                                  backend=config.backend,
+                                  use_device=config.use_device,
+                                  device=devices[sid], rows=(lo, hi),
+                                  shared_device_index=layout, obs=self.obs)
+                    for rid in range(config.num_replicas)]
+                self.shards.append(
+                    ShardReplicaSet(sid, lo, hi, replicas, obs=self.obs))
+            self.fanout = ScatterGatherExecutor(
+                self.shards, self.router, config.batch_size, obs=self.obs,
+                graph=graph, id_to_mr=self._id_to_mr)
         self.cache = ResultCache(config.cache_capacity,
                                  ttl_s=config.cache_ttl_s, obs=self.obs)
         clock = (config.clock if config.clock is not None
@@ -113,6 +145,7 @@ class ShardedRLCService:
         self.queries_shed = 0
         self.deltas_applied = 0
         self._delta = None          # lazy DeltaBuilder (apply_delta)
+        self._engine = None         # lazy AsyncEngine (start()/submit())
         self._closed = False
         self._last_audit = None     # most recent audit_report() document
         self._m_explain = self.obs.registry.counter(
@@ -160,9 +193,23 @@ class ShardedRLCService:
     telemetry_snapshot = RLCService.telemetry_snapshot
     chrome_trace = RLCService.chrome_trace
     prometheus = RLCService.prometheus
-    close = RLCService.close
+    # unified lifecycle: identical start()/submit()/close()/context-
+    # manager protocol on both facades (one AsyncEngine implementation)
+    start = RLCService.start
+    submit = RLCService.submit
+    start_ticker = RLCService.start_ticker
+    stop_ticker = RLCService.stop_ticker
     __enter__ = RLCService.__enter__
     __exit__ = RLCService.__exit__
+
+    def close(self) -> None:
+        """Same contract as :meth:`RLCService.close`, plus the worker
+        fleet: under ``transport="rpc"`` the shard-host processes get a
+        graceful shutdown after the engine drains."""
+        already = self._closed
+        RLCService.close(self)
+        if not already and self.cluster is not None:
+            self.cluster.close()
 
     def _adopt_rebuilt_index(self, db) -> None:
         """Sharded flavor of the bootstrap-over-adopted-index resync:
@@ -186,6 +233,23 @@ class ShardedRLCService:
         shard_s = self.plan.shard_of(s)
         shard_t = self.plan.shard_of(t)
         route = dict(shard_s=shard_s, shard_t=shard_t, home=shard_t)
+        if self.cluster is not None:
+            # rpc transport: serving rows live in worker processes, but
+            # the controller's global frozen holds byte-identical rows
+            # (workers were initialized from its slices) — EXPLAIN joins
+            # those without a round-trip, off the routing counters
+            from repro.obs.explain import explain_rows
+            oh, om = self.frozen.row_out(s)
+            ih, im = self.frozen.row_in(t)
+            w = explain_rows(oh, om, ih, im, s, t, mr_id,
+                             aid=self.frozen.aid, max_hubs=max_hubs)
+            if shard_s == shard_t:
+                route.update(path="local")
+            else:
+                route.update(path="remote", digest_entries=int(len(oh)),
+                             digest_bytes=int(oh.nbytes + om.nbytes))
+            return dict(answer=w["answer"], backend="rpc:frozen",
+                        witness=w, route=route)
         if shard_s == shard_t:
             rep = self.shards[shard_s].acquire()
             ws, backend = rep.executor.explain_batch(
@@ -250,6 +314,19 @@ class ShardedRLCService:
         self.generation += 1
         touched: List[int] = []
         backend_name = f"delta[{self._delta_backend_name()}]"
+        if self.cluster is not None:
+            # rpc transport: ship fresh slices only to shards whose row
+            # range went dirty, worker by worker behind the per-worker
+            # fence (each worker rebuilds its dict-index slice from the
+            # shipped rows, so there is no global fallback to repoint)
+            for sid, (lo, hi) in enumerate(self.plan.ranges()):
+                owns_dirty = (refreeze is None or bool(
+                    np.searchsorted(refreeze, lo)
+                    < np.searchsorted(refreeze, hi)))
+                if owns_dirty:
+                    self.cluster.swap_shard(sid, self.generation,
+                                            frozen.slice_rows(lo, hi))
+                    touched.append(sid)
         for rs in self.shards:
             owns_dirty = (refreeze is None or bool(
                 np.searchsorted(refreeze, rs.lo)
@@ -338,6 +415,12 @@ class ShardedRLCService:
                 f"plan covers {self.plan.num_vertices}")
         frozen = index.freeze(self.mr_ids)
         self.generation += 1
+        if self.cluster is not None:
+            # rolling fenced swap, worker by worker: replica siblings
+            # keep serving while one worker installs the new generation
+            for sid, (lo, hi) in enumerate(self.plan.ranges()):
+                self.cluster.swap_shard(sid, self.generation,
+                                        frozen.slice_rows(lo, hi))
         for rs in self.shards:
             sl = frozen.slice_rows(rs.lo, rs.hi)
             rs.swap(self.generation, sl, self.mr_ids, index, self._id_to_mr,
@@ -390,24 +473,19 @@ class ShardedRLCService:
         return rep
 
     def stats(self) -> dict:
-        """The RLCService stats shape plus per-shard breakdowns."""
-        return dict(
-            queries_served=self.queries_served,
-            queries_shed=self.queries_shed,
-            deltas_applied=self.deltas_applied,
-            cache=self.cache.stats.as_dict(),
+        """The ``repro.service.stats/1`` shape plus per-shard breakdowns
+        (shared sections built once in :mod:`repro.service.stats`).
+        Under ``transport="rpc"`` the ``shards`` list carries one row
+        per worker process and ``rpc`` the cluster's membership/wire
+        accounting."""
+        from ..stats import base_stats
+        out = base_stats(self, "sharded", self.config.transport)
+        out.update(
             executor=self.fanout.stats(),
-            scheduler=dict(
-                batches_full=self.batcher.batches_full,
-                batches_deadline=self.batcher.batches_deadline,
-                batches_drain=self.batcher.batches_drain,
-                coalesced=self.batcher.coalesced,
-                pending=self.batcher.pending()),
-            control=self.ctl.stats(),
             router=self.router.stats(),
-            build=(self.build_stats.as_dict()
-                   if self.build_stats is not None else None),
-            shards=[rs.stats() for rs in self.shards],
+            shards=([rs.stats() for rs in self.shards]
+                    if self.cluster is None
+                    else self.cluster.worker_stats()),
             index=dict(
                 entries=self.frozen.num_entries(),
                 size_bytes=self.frozen.size_bytes(),
@@ -416,8 +494,7 @@ class ShardedRLCService:
                 num_replicas=self.config.num_replicas,
                 generation=self.generation,
                 plan=self.plan.as_dict()),
-            telemetry=dict(enabled=self.obs.enabled,
-                           tracing=self.obs.tracer.stats()),
-            shadow=(self._shadow.stats()
-                    if self._shadow is not None else None),
         )
+        if self.cluster is not None:
+            out["rpc"] = self.cluster.stats()
+        return out

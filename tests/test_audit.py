@@ -227,7 +227,9 @@ def _write_artifacts(d, qps=100.0, swap=0.1):
             shards_2=dict(qps=qps), hot_swap=dict(swap_s=swap),
             slo=dict(p99_over_p50=1.5),
             overload=dict(shed_ratio=0.1),
-            warming=dict(warm_hit_rate=0.6))),
+            warming=dict(warm_hit_rate=0.6),
+            rpc=dict(qps=qps / 4, roundtrip_p99_us=swap * 1e4,
+                     digest_wire_kb=swap * 40.0))),
         "indexing.json": dict(aggregate_s=dict(python=2.0, numpy=0.4),
                               numpy_aggregate_speedup=5.0,
                               parallel_speedup=1.8),

@@ -222,7 +222,7 @@ def test_shadow_detects_corrupted_index():
                          cache_capacity=0, shadow_sample_rate=1.0))
     s, t, L = sample_index_queries(svc.frozen, svc._id_to_mr,
                                    n=1, seed=3)[0]
-    assert svc.query(s, t, L) is True
+    assert svc.query(s, t, L) == True   # noqa: E712 — typed Answer
     svc.drain_shadow()
     assert svc._shadow.divergent == 0
     # corrupt both entry rows the query joins: the served answer flips
@@ -231,7 +231,7 @@ def test_shadow_detects_corrupted_index():
     i0, i1 = svc.frozen.in_indptr[t], svc.frozen.in_indptr[t + 1]
     svc.frozen.out_hub[o0:o1] = -2
     svc.frozen.in_hub[i0:i1] = -2
-    assert svc.query(s, t, L) is False           # corrupted serving path
+    assert svc.query(s, t, L) == False  # noqa: E712 — corrupted serving path
     assert bibfs_rlc(g, s, t, L) is True          # ground truth unchanged
     svc.drain_shadow()
     st = svc._shadow.stats()

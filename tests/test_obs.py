@@ -520,13 +520,29 @@ def test_run_py_validates_telemetry_artifacts(tmp_path, monkeypatch):
     audit = svc.audit_report(sample=16)
     good["extra"] = dict(audit=audit, shadow=dict(divergent=0, checked=4))
 
-    # minimal control-plane stages satisfying run.py's control_stages_ok
+    # minimal rpc-transport stats doc satisfying run.py's rpc_stage_ok:
+    # a real in-proc sharded stats document with the rpc section the
+    # wire transport would add
+    sh = ShardedRLCService.build(
+        erdos_renyi(40, 2.5, 3, seed=3),
+        ShardedServiceConfig(k=2, num_shards=2, use_device=False))
+    rpc_stats = sh.stats()
+    rpc_stats["transport"] = "rpc"
+    rpc_stats["rpc"] = dict(
+        live_workers=2, membership_epoch=1, joins=2, leaves=0,
+        rejoins=0, retries=0, generation=0,
+        wire_bytes=dict(sent=1000, received=500))
+    # minimal control-plane + rpc stages satisfying run.py's
+    # control_stages_ok / rpc_stage_ok / stats_schema_ok
     control = dict(
         slo=dict(shed=0, p99_over_p50=1.5),
         overload=dict(shed_ratio=0.1, underload_shed=0,
                       answers_match_oracle=True,
                       underload=dict(answers_match_oracle=True)),
-        warming=dict(cold_hit_rate=0.3, warm_hit_rate=0.6))
+        warming=dict(cold_hit_rate=0.3, warm_hit_rate=0.6),
+        rpc=dict(shards=2, answers_match=True, digest_wire_kb=0.5,
+                 roundtrips=7, stats=rpc_stats),
+        rpc_async=dict(answers_match=True, overlap_s=0.01))
     write("service.json", dict(results=dict(numpy=dict(telemetry=good))))
     write("sharded.json", dict(results=dict(
         shards_2=dict(telemetry=good), **control)))

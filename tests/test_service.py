@@ -372,10 +372,10 @@ def test_service_accepts_string_and_named_constraints():
     g, names, labels = fig1_graph()
     svc = RLCService.build(
         g, ServiceConfig(k=3, batch_size=4, label_names=labels))
-    assert svc.query(names["A14"], names["A19"], "(debits credits)+") is True
+    assert svc.query(names["A14"], names["A19"], "(debits credits)+") == True  # noqa: E712 — Answer equality
     assert svc.query(names["P10"], names["P13"],
-                     "(knows knows worksFor)+") is False
-    assert svc.query(names["A14"], names["A19"], (2, 3)) is True
+                     "(knows knows worksFor)+") == False  # noqa: E712
+    assert svc.query(names["A14"], names["A19"], (2, 3)) == True  # noqa: E712
 
 
 def test_service_rejects_bad_input():

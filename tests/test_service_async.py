@@ -1,0 +1,306 @@
+"""Async admission (`submit()` futures), the typed Answer result, the
+unified service lifecycle, and the ``repro.service.stats/1`` schema
+(ISSUE-10 satellites 1-4)."""
+import threading
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.graphgen import erdos_renyi
+from repro.service import (SHED, Answer, RLCService, ServiceConfig,
+                           ShardedRLCService, ShardedServiceConfig,
+                           validate_stats)
+
+K = 2
+
+
+def _svc(**kw):
+    g = erdos_renyi(80, 3.0, 3, seed=11)
+    cfg = dict(k=K, batch_size=8, backend="numpy", use_device=False)
+    cfg.update(kw)
+    return g, RLCService.build(g, ServiceConfig(**cfg))
+
+
+def _queries(g, n=40, seed=0):
+    rng = np.random.default_rng(seed)
+    st = rng.integers(0, g.num_vertices, size=(n, 2))
+    return [(int(s), int(t), (0,)) for s, t in st]
+
+
+# ------------------------------------------------------------------ #
+# The typed Answer result
+# ------------------------------------------------------------------ #
+def test_answer_wraps_bool_transparently():
+    a = Answer(True, "computed", "numpy")
+    assert bool(a) is True and a == True and a != False  # noqa: E712
+    assert a == Answer(True, "cache_hit")  # equality is value-only
+    assert hash(a) == hash(Answer(True, "computed", "sorted"))
+    assert a.disposition == "computed" and a.backend == "numpy"
+    assert "True" in repr(a) and "computed" in repr(a)
+    d = a.as_dict()
+    assert d == dict(value=True, disposition="computed", backend="numpy")
+
+
+def test_answer_is_immutable_and_validated():
+    a = Answer(False, "computed")
+    with pytest.raises(AttributeError):
+        a.value = True
+    with pytest.raises(ValueError):
+        Answer(None, "computed")        # only shed carries no value
+    with pytest.raises(ValueError):
+        Answer(True, "shed")            # shed carries no value
+    with pytest.raises(ValueError):
+        Answer(True, "nonsense")
+
+
+def test_shed_is_an_answer_and_still_refuses_bool():
+    assert isinstance(SHED, Answer) and SHED.shed
+    assert repr(SHED) == "SHED"
+    with pytest.raises(TypeError):
+        bool(SHED)
+    assert SHED == SHED and SHED != Answer(True, "computed")
+    assert SHED != True and SHED != False  # noqa: E712
+
+
+def test_query_returns_answers_with_dispositions():
+    g, svc = _svc()
+    qs = _queries(g, 12)
+    first = svc.query_batch(qs)
+    assert all(isinstance(a, Answer) for a in first)
+    assert {a.disposition for a in first} == {"computed"}
+    assert {a.backend for a in first} == {"numpy"}
+    again = svc.query_batch(qs)
+    assert {a.disposition for a in again} == {"cache_hit"}
+    assert first == again               # equality is value-only
+    assert [bool(a) for a in first] == [bool(a) for a in again]
+
+
+# ------------------------------------------------------------------ #
+# submit(): futures, ordering, coalescing, exceptions
+# ------------------------------------------------------------------ #
+def test_submit_matches_sync_answers():
+    g, svc = _svc()
+    qs = _queries(g, 40)
+    sync = [bool(a) for a in svc.query_batch(qs)]
+    svc.cache.clear()
+    with svc.start():
+        futs = [svc.submit(s, t, c) for s, t, c in qs]
+        svc._engine.flush()
+        vals = [f.result(timeout=30) for f in futs]
+    assert [bool(v) for v in vals] == sync
+    assert {v.disposition for v in vals} <= {"computed", "cache_hit"}
+
+
+def test_submit_resolution_order_follows_admission_order():
+    g, svc = _svc(batch_size=4)
+    qs = _queries(g, 16, seed=3)
+    order = []
+    lock = threading.Lock()
+    with svc.start():
+        futs = []
+        for i, (s, t, c) in enumerate(qs):
+            f = svc.submit(s, t, c)
+            f.add_done_callback(
+                lambda _f, i=i: (lock.acquire(), order.append(i),
+                                 lock.release()))
+            futs.append(f)
+        svc._engine.flush()
+        for f in futs:
+            f.result(timeout=30)
+    # same-bucket batches flush in admission order, so the completion
+    # order never inverts *within* the stream of non-cache-hit keys
+    assert sorted(order) == list(range(16))
+    non_hits = [i for i in order]
+    assert non_hits == sorted(non_hits) or len(set(order)) == 16
+
+
+def test_submit_coalesces_duplicate_inflight_keys():
+    g, svc = _svc(batch_size=64, max_wait_ms=1e4)  # nothing auto-flushes
+    s, t, c = _queries(g, 1, seed=5)[0]
+    with svc.start(tick_interval_s=10.0):   # ticker effectively off
+        f1 = svc.submit(s, t, c)
+        f2 = svc.submit(s, t, c)
+        f3 = svc.submit(s, t, c)
+        assert svc.batcher.coalesced >= 2
+        svc._engine.flush()
+        r1, r2, r3 = (f.result(timeout=30) for f in (f1, f2, f3))
+    assert bool(r1) == bool(r2) == bool(r3)
+    assert svc._engine.exec_batches == 1    # one execution served all
+
+
+def test_submit_cache_hit_resolves_immediately():
+    g, svc = _svc()
+    s, t, c = _queries(g, 1)[0]
+    expected = bool(svc.query(s, t, c))
+    with svc.start(tick_interval_s=10.0):
+        f = svc.submit(s, t, c)
+        assert f.done()                     # no execution round-trip
+        assert f.result().disposition == "cache_hit"
+        assert bool(f.result()) == expected
+
+
+def test_submit_propagates_execution_exceptions():
+    g, svc = _svc(batch_size=4)
+    qs = _queries(g, 4, seed=7)
+    boom = RuntimeError("executor exploded")
+
+    orig = svc._run_batch
+
+    def bad_run_batch(batch, tr=None):
+        raise boom
+
+    with svc.start(tick_interval_s=10.0):
+        svc._run_batch = bad_run_batch
+        futs = [svc.submit(s, t, c) for s, t, c in qs]
+        svc._engine.flush()
+        for f in futs:
+            with pytest.raises(RuntimeError, match="executor exploded"):
+                f.result(timeout=30)
+        assert svc._engine.failed_batches >= 1
+        # the engine survives: later submits still resolve
+        svc._run_batch = orig
+        svc.cache.clear()
+        f = svc.submit(*qs[0])
+        svc._engine.flush()
+        assert isinstance(f.result(timeout=30), Answer)
+
+
+def test_submit_sheds_via_admission_control():
+    g, svc = _svc(batch_size=64, max_wait_ms=1e4, admission_max_pending=2)
+    qs = _queries(g, 12, seed=9)
+    with svc.start(tick_interval_s=10.0):
+        futs = [svc.submit(s, t, c) for s, t, c in qs]
+        shed = [f for f in futs if f.done() and f.result() is SHED]
+        assert shed, "pending depth 2 must shed some of 12 submits"
+        svc._engine.flush()
+        vals = [f.result(timeout=30) for f in futs]
+    assert all(isinstance(v, Answer) for v in vals)
+    assert svc.queries_shed == len([v for v in vals if v.shed])
+    assert svc.stats()["async"]["shed"] == svc.queries_shed
+
+
+def test_malformed_submit_raises_synchronously():
+    g, svc = _svc()
+    with svc.start():
+        with pytest.raises(ValueError):
+            svc.submit(-5, 10 ** 9, (0,))
+
+
+# ------------------------------------------------------------------ #
+# Unified lifecycle
+# ------------------------------------------------------------------ #
+def test_lifecycle_is_idempotent_and_context_managed():
+    g, svc = _svc()
+    assert svc.start() is svc
+    svc.start()                          # second start is a no-op
+    assert svc._engine.active
+    svc.close()
+    svc.close()                          # double close is fine
+    assert not svc._engine.active
+    with pytest.raises(RuntimeError):
+        svc.start()                      # closed services stay closed
+    g2, svc2 = _svc()
+    with svc2.start() as inside:
+        assert inside is svc2
+    assert svc2._closed
+
+
+def test_sharded_shares_the_same_lifecycle():
+    g = erdos_renyi(80, 3.0, 3, seed=11)
+    svc = ShardedRLCService.build(g, ShardedServiceConfig(
+        k=K, num_shards=2, batch_size=8, backend="numpy",
+        use_device=False))
+    qs = _queries(g, 20)
+    sync = [bool(a) for a in svc.query_batch(qs)]
+    svc.cache.clear()
+    with svc.start():
+        futs = [svc.submit(s, t, c) for s, t, c in qs]
+        svc._engine.flush()
+        assert [bool(f.result(timeout=30)) for f in futs] == sync
+    assert svc._closed
+
+
+def test_deprecated_ticker_shims_warn_and_delegate():
+    g, svc = _svc()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        svc.start_ticker()
+        assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert svc._engine is not None and svc._engine.active
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        svc.stop_ticker()
+        assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert svc._closed
+
+
+def test_query_batch_bridges_through_active_engine():
+    g, svc = _svc()
+    qs = _queries(g, 20)
+    expected = [bool(a) for a in svc.query_batch(qs)]
+    svc.cache.clear()
+    with svc.start():
+        got = svc.query_batch(qs)        # engine active: bridged path
+        assert [bool(a) for a in got] == expected
+        assert svc._engine.submitted >= 20
+
+
+def test_scheduler_ticker_on_error_hook():
+    from repro.service.scheduler import MicroBatcher
+    mb = MicroBatcher(2, 1e-4)
+    seen = []
+    mb.start_ticker(lambda b: (_ for _ in ()).throw(RuntimeError("x")),
+                    interval_s=1e-3, on_error=seen.append)
+    try:
+        mb.submit(1, 2, 0, 1)
+        deadline = __import__("time").monotonic() + 5.0
+        while not seen and __import__("time").monotonic() < deadline:
+            __import__("time").sleep(0.01)
+    finally:
+        mb.stop_ticker()
+    assert seen and isinstance(seen[0], RuntimeError)
+    assert mb.ticker_errors >= 1
+
+
+# ------------------------------------------------------------------ #
+# The versioned stats schema
+# ------------------------------------------------------------------ #
+def test_stats_schema_single_and_sharded():
+    g, svc = _svc()
+    svc.query_batch(_queries(g, 8))
+    doc = validate_stats(svc.stats())
+    assert doc["schema"] == "repro.service.stats/1"
+    assert doc["facade"] == "single" and doc["transport"] == "local"
+    assert doc["async"] is None          # engine never started
+    svc.start()
+    assert validate_stats(svc.stats())["async"]["active"]
+    svc.close()
+
+    sh = ShardedRLCService.build(g, ShardedServiceConfig(
+        k=K, num_shards=2, batch_size=8, backend="numpy",
+        use_device=False))
+    sh.query_batch(_queries(g, 8))
+    doc = validate_stats(sh.stats())
+    assert doc["facade"] == "sharded" and doc["transport"] == "inproc"
+    assert {"local", "remote", "sub_batches",
+            "digest_bytes"} <= set(doc["executor"])
+    sh.close()
+
+
+def test_validate_stats_rejects_drift():
+    g, svc = _svc()
+    doc = svc.stats()
+    bad = dict(doc); bad["schema"] = "repro.service.stats/0"
+    with pytest.raises(ValueError, match=r"\$\.schema"):
+        validate_stats(bad)
+    bad = dict(doc); bad.pop("scheduler")
+    with pytest.raises(ValueError, match=r"\$\.scheduler"):
+        validate_stats(bad)
+    bad = dict(doc); bad["facade"] = "tripled"
+    with pytest.raises(ValueError, match=r"\$\.facade"):
+        validate_stats(bad)
+    bad = dict(doc)
+    bad["scheduler"] = dict(doc["scheduler"], coalesced=-1)
+    with pytest.raises(ValueError, match=r"\$\.scheduler\.coalesced"):
+        validate_stats(bad)
